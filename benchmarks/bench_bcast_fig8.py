@@ -1,0 +1,79 @@
+"""Reproduction of the paper's Fig. 7/8 experiment on the postal-model
+simulator: the broadcast timing application sweeping message sizes with
+every rank taking a turn as root, comparing
+
+  mpich-binomial   (topology-unaware, the MPICH default of the era)
+  magpie-machine   (2-level, machine-boundary clustering)
+  magpie-site      (2-level, site-boundary clustering)
+  multilevel       (the paper, flat-at-WAN / binomial below)
+  adaptive         (beyond-paper: per-level Bar-Noy/Kipnis shape selection)
+
+Topology: 16 procs on each of SDSC-SP, ANL-SP, ANL-O2K (sites SDSC/ANL),
+link classes calibrated to 2002-era WAN/LAN/SMP.  Output: CSV
+``size_bytes,variant,sum_over_roots_seconds`` — same metric as Fig. 8
+(time to broadcast with each rank as root once).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import schedule as S
+from repro.core.simulator import simulate
+from repro.core.topology import (paper_fig8_topology, magpie_machine_view,
+                                 magpie_site_view)
+from repro.core.trees import (binomial_tree, build_multilevel_tree,
+                              PAPER_POLICY, adaptive_policy)
+
+SIZES = [1 << k for k in range(10, 21)]  # 1 KB .. 1 MB
+ROOT_STRIDE = 4  # every 4th rank as root (48 roots -> 12; same shape, 4x faster)
+
+
+def variants(topo):
+    return {
+        "mpich-binomial": lambda root, nb: binomial_tree(
+            root, range(topo.nprocs)),
+        "magpie-machine": lambda root, nb: build_multilevel_tree(
+            magpie_machine_view(topo), root),
+        "magpie-site": lambda root, nb: build_multilevel_tree(
+            magpie_site_view(topo), root),
+        "multilevel": lambda root, nb: build_multilevel_tree(
+            topo, root, policy=PAPER_POLICY),
+        "adaptive": lambda root, nb: build_multilevel_tree(
+            topo, root, policy=adaptive_policy(topo, nb)),
+    }
+
+
+def run(out=sys.stdout) -> dict:
+    topo = paper_fig8_topology()
+    results: dict[str, list[tuple[int, float]]] = {}
+    print("size_bytes,variant,sum_over_roots_s", file=out)
+    for nb in SIZES:
+        for name, mk in variants(topo).items():
+            total = 0.0
+            for root in range(0, topo.nprocs, ROOT_STRIDE):
+                tree = mk(root, nb)
+                total += max(simulate(S.bcast(tree, nb), topo).values())
+            results.setdefault(name, []).append((nb, total))
+            print(f"{nb},{name},{total:.4f}", file=out)
+    return results
+
+
+def check(results: dict) -> list[str]:
+    """Assertions mirroring the paper's qualitative claims."""
+    msgs = []
+    by = {k: dict(v) for k, v in results.items()}
+    for nb in SIZES[4:]:  # >= 16 KB: the regime the paper highlights
+        ml, site = by["multilevel"][nb], by["magpie-site"][nb]
+        mach, binm = by["magpie-machine"][nb], by["mpich-binomial"][nb]
+        ok = ml <= site <= mach <= binm * 1.001
+        msgs.append(f"N={nb:>8}: ml={ml:.3f} site={site:.3f} "
+                    f"mach={mach:.3f} bin={binm:.3f} {'OK' if ok else 'VIOLATION'}")
+    for nb in SIZES:
+        assert by["adaptive"][nb] <= by["multilevel"][nb] * 1.01, nb
+    return msgs
+
+
+if __name__ == "__main__":
+    res = run()
+    for line in check(res):
+        print("#", line)

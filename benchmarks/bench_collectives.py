@@ -1,0 +1,87 @@
+"""All five paper collectives (+ allreduce/allgather extensions) across
+topologies and regimes — one row per (op, topology, size, variant).
+
+Also reports the observed trade-off table: where multilevel wins (latency /
+message-count bound) and where bandwidth concentration loses (large gather/
+scatter onto one slow link) — the honest version of the paper's Table.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import schedule as S
+from repro.core.simulator import simulate
+from repro.core.topology import (Topology, WAN, LAN, SMP,
+                                 paper_fig8_topology, tpu_v5e_multipod)
+from repro.core.trees import (binomial_tree, build_multilevel_tree,
+                              PAPER_POLICY, adaptive_policy)
+
+OPS = {"bcast": S.bcast, "reduce": S.reduce, "barrier": None,
+       "gather": S.gather, "scatter": S.scatter, "allreduce": S.allreduce,
+       "allgather": S.allgather}
+
+
+def many_clusters():
+    site = [i // 16 for i in range(64)]
+    mach = [i // 4 for i in range(64)]
+    return Topology(np.stack([site, mach], 1), [WAN, LAN, SMP])
+
+
+TOPOLOGIES = {
+    "fig8": paper_fig8_topology(),
+    "many-clusters": many_clusters(),
+    "tpu-2pod": tpu_v5e_multipod(pods=2, boards=8, chips_per_board=4),
+}
+
+
+def run(out=sys.stdout) -> list[dict]:
+    rows = []
+    print("topology,op,size_bytes,variant,seconds", file=out)
+    for tname, topo in TOPOLOGIES.items():
+        for oname, op in OPS.items():
+            for nb in (1e3, 64e3):
+                for vname, tree in {
+                    "binomial-oblivious": binomial_tree(0, range(topo.nprocs)),
+                    "multilevel": build_multilevel_tree(topo, 0,
+                                                        policy=PAPER_POLICY),
+                    "adaptive": build_multilevel_tree(
+                        topo, 0, policy=adaptive_policy(topo, nb)),
+                }.items():
+                    sched = S.barrier(tree) if op is None else op(tree, nb)
+                    t = max(simulate(sched, topo).values())
+                    rows.append({"topology": tname, "op": oname,
+                                 "size": nb, "variant": vname, "s": t})
+                    print(f"{tname},{oname},{nb:.0f},{vname},{t:.6f}",
+                          file=out)
+                if op is None:
+                    break  # barrier has no size sweep
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    """Win/loss table for multilevel vs oblivious."""
+    out = []
+    for t in TOPOLOGIES:
+        wins = losses = 0
+        for op in OPS:
+            for nb in (1e3, 64e3):
+                sel = {r["variant"]: r["s"] for r in rows
+                       if r["topology"] == t and r["op"] == op
+                       and r["size"] in (nb, 1e3)}
+                if not sel or "multilevel" not in sel:
+                    continue
+                if sel["multilevel"] <= sel["binomial-oblivious"]:
+                    wins += 1
+                else:
+                    losses += 1
+        out.append(f"{t}: multilevel wins {wins}, loses {losses} "
+                   f"(losses are bandwidth-concentration cases)")
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    for line in summarize(rows):
+        print("#", line)

@@ -1,0 +1,94 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+  microbench  wall-clock us/call for the core tree/schedule machinery
+  claims      paper §4 closed-form cost-model table
+  fig8        paper Fig. 8: bcast sweep, 5 variants (simulator)
+  collectives 5 collectives x 3 topologies x sizes (simulator)
+  roofline    per (arch x shape x mesh) roofline terms from the dry-run
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, then each
+section's own CSV.
+"""
+from __future__ import annotations
+
+import io
+import time
+
+from repro.core.costmodel import (binomial_bcast_cost, multilevel_bcast_cost,
+                                  two_level_bcast_cost)
+from repro.core.topology import WAN, SMP, paper_fig8_topology
+from repro.core.trees import build_multilevel_tree, binomial_tree
+
+
+def _timeit(fn, n=20) -> float:
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_microbench() -> list[str]:
+    topo = paper_fig8_topology()
+    rows = []
+    rows.append(f"tree_multilevel_build,"
+                f"{_timeit(lambda: build_multilevel_tree(topo, 0)):.1f},48procs")
+    rows.append(f"tree_binomial_build,"
+                f"{_timeit(lambda: binomial_tree(0, range(48))):.1f},48procs")
+    from repro.core import schedule as S
+    from repro.core.simulator import simulate
+    t = build_multilevel_tree(topo, 0)
+    rows.append(f"simulate_bcast,"
+                f"{_timeit(lambda: simulate(S.bcast(t, 1e6), topo)):.1f},"
+                f"48procs_1MB")
+    return rows
+
+
+def bench_claims() -> list[str]:
+    """Paper §4: analytic binomial vs 2-level vs multilevel, C in 2..32."""
+    rows = ["P,C,N_bytes,binomial_s,two_level_s,multilevel_s,speedup"]
+    args = (WAN.latency, WAN.bandwidth, SMP.latency, SMP.bandwidth)
+    for C in (2, 4, 8, 16, 32):
+        P, N = 256, 64e3
+        b = binomial_bcast_cost(P, C, N, *args)
+        t2 = two_level_bcast_cost(P, C, N, *args)
+        m = multilevel_bcast_cost(P, C, N, *args)
+        rows.append(f"{P},{C},{N:.0f},{b:.4f},{t2:.4f},{m:.4f},{b/m:.2f}")
+    return rows
+
+
+def main() -> None:
+    print("== microbench (name,us_per_call,derived) ==")
+    for r in bench_microbench():
+        print(r)
+
+    print("\n== paper §4 closed-form claims ==")
+    for r in bench_claims():
+        print(r)
+
+    print("\n== paper Fig. 8 reproduction (simulator) ==")
+    from benchmarks import bench_bcast_fig8
+    buf = io.StringIO()
+    res = bench_bcast_fig8.run(out=buf)
+    print(buf.getvalue(), end="")
+    for line in bench_bcast_fig8.check(res):
+        print("#", line)
+
+    print("\n== collectives x topologies ==")
+    from benchmarks import bench_collectives
+    buf = io.StringIO()
+    rows = bench_collectives.run(out=buf)
+    print(buf.getvalue(), end="")
+    for line in bench_collectives.summarize(rows):
+        print("#", line)
+
+    print("\n== roofline (from dry-run artifacts) ==")
+    from benchmarks import roofline
+    try:
+        roofline.main()
+    except FileNotFoundError:
+        print("# run `python -m repro.launch.dryrun --all` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end distributed training: ~100M-param LM, a few hundred steps,
+multilevel gradient collectives + ZeRO-1 + checkpointing + a mid-run pod
+failure with elastic recovery.
+
+Run (CPU, 8 emulated devices, ~10 min):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--full]
+
+``--full`` uses the real gpt-100m config (slower on CPU); the default uses
+the reduced config so CI finishes quickly — the distributed machinery
+exercised is identical.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--comm", default="multilevel_compress",
+                    choices=["flat", "multilevel", "multilevel_compress"])
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    if n_dev < 8:
+        print(f"[e2e] WARNING: only {n_dev} device(s); "
+              "set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        mesh = "1x1x1" if n_dev == 1 else "1x2x2"
+    else:
+        mesh = "2x2x2"
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = train(
+            arch="gpt-100m",
+            steps=args.steps,
+            mesh_spec=mesh,
+            seq=128,
+            batch=8,
+            comm=args.comm,
+            zero1=True,
+            ckpt_dir=ckpt,
+            ckpt_every=50,
+            # inject a pod failure at step 60% through: the driver shrinks
+            # the mesh, restores the last checkpoint, raises accumulation
+            fail_at={int(args.steps * 0.6): [1]} if mesh == "2x2x2" else None,
+            smoke=not args.full,
+            log_every=20,
+        )
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"\n[e2e] loss {first:.3f} -> {last:.3f} over {args.steps} steps, "
+          f"{out['recoveries']} elastic recoveries, "
+          f"{out['stragglers']} straggler drops")
+    assert last < first, "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

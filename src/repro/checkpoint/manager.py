@@ -1,0 +1,140 @@
+"""Sharded checkpointing with atomic commits and an async writer thread.
+
+Layout:  <dir>/step_<N>/   arrays.npz-per-leaf + manifest.json
+Commit protocol: write into ``step_<N>.tmp``, fsync, atomic rename — a crash
+mid-write can never corrupt the latest durable checkpoint (restore scans for
+the newest *committed* directory).  ``keep`` bounds disk usage.
+
+On a real multi-host fleet each host writes only the shards it owns
+(``process_index`` in the leaf filename) — here single-process writes all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import numpy as np
+import ml_dtypes
+import jax
+
+__all__ = ["CheckpointManager"]
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """np.save silently degrades bfloat16 to a void dtype — store it as a
+    uint16 view and record the logical dtype in the manifest."""
+    if arr.dtype == _BF16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_saved(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str == "bfloat16":
+        return arr.view(_BF16)
+    return arr
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        out.append((name, leaf))
+    return out
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_write: bool = True
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously (consistent point), write
+        to disk asynchronously."""
+        host_state = jax.tree.map(np.asarray, state)  # device -> host copy
+        if self.async_write and not blocking:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_state)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: Any) -> None:
+        final = os.path.join(self.directory, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        for name, leaf in _leaf_paths(host_state):
+            arr, dtype_str = _to_savable(np.asarray(leaf))
+            fn = f"{name}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][fn] = {"shape": list(arr.shape),
+                                      "dtype": dtype_str}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def list_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp") \
+                    and os.path.exists(os.path.join(self.directory, d,
+                                                    "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any) -> Any:
+        """Load checkpoint ``step`` into the structure of ``like``."""
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            name = "_".join(
+                str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+            arr = np.load(os.path.join(d, f"{name}.npy"))
+            arr = _from_saved(arr, manifest["leaves"][f"{name}.npy"]["dtype"])
+            if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {name}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

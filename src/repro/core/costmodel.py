@@ -1,0 +1,103 @@
+"""Closed-form cost models + TPU hardware constants.
+
+Two roles:
+1. The paper's §4 napkin math — binomial vs multilevel bcast cost over C
+   clusters of P processes — used to validate the simulator against the
+   paper's own claim (log C -> 1 slow messages).
+2. The roofline constants + three-term roofline used by benchmarks/ and
+   EXPERIMENTS.md (compute / memory / collective terms for TPU v5e).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "HW",
+    "TPU_V5E",
+    "binomial_bcast_cost",
+    "multilevel_bcast_cost",
+    "two_level_bcast_cost",
+    "roofline_terms",
+]
+
+
+# ---------------------------------------------------------------------- #
+# Paper §4 closed forms.  Params: slow link (l_s, b_s), fast link (l_f, b_f).
+# ---------------------------------------------------------------------- #
+
+def binomial_bcast_cost(P: int, C: int, nbytes: float,
+                        l_s: float, b_s: float, l_f: float, b_f: float) -> float:
+    """Topology-unaware binomial tree: >= log2(C) inter-cluster messages on
+    the longest path plus log2(P/C) intra-cluster messages."""
+    inter = math.log2(max(C, 1)) if C > 1 else 0.0
+    intra = math.log2(max(P // max(C, 1), 1))
+    return inter * (l_s + nbytes / b_s) + intra * (l_f + nbytes / b_f)
+
+
+def multilevel_bcast_cost(P: int, C: int, nbytes: float,
+                          l_s: float, b_s: float, l_f: float, b_f: float) -> float:
+    """Paper's multilevel method: exactly 1 message on the slow link (flat
+    inter-cluster stage overlaps across clusters), then log2(P/C) fast ones."""
+    inter = 1.0 if C > 1 else 0.0
+    intra = math.log2(max(P // max(C, 1), 1))
+    return inter * (l_s + nbytes / b_s) + intra * (l_f + nbytes / b_f)
+
+
+def two_level_bcast_cost(P: int, C: int, nbytes: float,
+                         l_s: float, b_s: float, l_f: float, b_f: float) -> float:
+    """MagPIe-style 2-level machine clustering: the root sends one message to
+    EVERY other cluster across the slow network (C-1 sequential injections on
+    one NIC), then binomial within clusters."""
+    inter = (C - 1) * (l_s + nbytes / b_s) if C > 1 else 0.0
+    intra = math.log2(max(P // max(C, 1), 1)) * (l_f + nbytes / b_f)
+    return inter + intra
+
+
+# ---------------------------------------------------------------------- #
+# TPU roofline
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float        # bf16 FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    dcn_bw: float            # bytes/s per chip, inter-pod
+    hbm_bytes: float         # HBM capacity per chip
+    vmem_bytes: float
+
+
+TPU_V5E = HW(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    dcn_bw=6.25e9,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2**20,
+)
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    ici_bytes: float,
+    chips: int,
+    hw: HW = TPU_V5E,
+    dcn_bytes: float = 0.0,
+) -> dict[str, float]:
+    """The three roofline terms, in seconds, for one step on ``chips`` chips.
+
+    ``hlo_flops`` / ``hlo_bytes`` are GLOBAL totals from cost_analysis();
+    ``ici_bytes`` is the per-chip collective traffic on ICI links,
+    ``dcn_bytes`` the per-chip traffic crossing the pod boundary.
+    """
+    compute = hlo_flops / (chips * hw.peak_flops)
+    memory = hlo_bytes / (chips * hw.hbm_bw)
+    collective = ici_bytes / hw.ici_bw + dcn_bytes / hw.dcn_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bound"] = max(terms, key=terms.get).replace("_s", "")
+    terms["step_s"] = max(compute, memory, collective)
+    return terms

@@ -1,0 +1,89 @@
+"""Event-driven postal-model executor for collective schedules.
+
+Charges every message its TRUE per-edge cost from a ``Topology`` — even when
+the tree was built from an oblivious (flat) or 2-level (MagPIe) view.  This is
+how we reproduce the paper's Fig. 8 on one CPU: build trees under different
+views, simulate them all on the real multilevel network.
+
+Model per message (postal / LogP-flavoured):
+  sender occupied  [t, t + overhead + nbytes/bw]   (sequential injections)
+  arrival at dst    t + latency + nbytes/bw
+Receivers in UP phases drain inbound messages sequentially with the same
+occupancy term, which penalises high fan-in on slow links — the effect that
+makes flat trees lose at low latency.
+"""
+from __future__ import annotations
+
+from .schedule import Direction, Schedule
+from .topology import Topology
+
+__all__ = ["simulate", "simulate_op"]
+
+
+def simulate(sched: Schedule, topo: Topology, start: float = 0.0) -> dict[int, float]:
+    """Run ``sched`` on ``topo``; return per-rank completion times."""
+    done: dict[int, float] = {}
+    t = start
+    for phase in sched.phases:
+        if phase.direction is Direction.DOWN:
+            done = _run_down(phase, topo, t)
+        else:
+            done = _run_up(phase, topo, t)
+        t = max(done.values())
+    return done
+
+
+def _run_down(phase, topo: Topology, start: float) -> dict[int, float]:
+    tree = phase.tree
+    ready = {tree.root: start}
+    order = tree.members()  # preorder: parents before children
+    for p in order:
+        t = ready[p]
+        for msg in phase.msgs.get(p, []):
+            lvl = topo.level_of_edge(msg.src, msg.dst)
+            arrival = t + lvl.latency + msg.nbytes / lvl.bandwidth
+            ready[msg.dst] = arrival
+            t += lvl.occupy(msg.nbytes)  # next injection after this one
+    return ready
+
+
+def _run_up(phase, topo: Topology, start: float) -> dict[int, float]:
+    tree = phase.tree
+    done: dict[int, float] = {}
+
+    def finish(p: int) -> float:
+        """Time p has received (and folded) all of its subtree."""
+        if p in done:
+            return done[p]
+        t = start
+        # Children send as soon as their own subtrees finish; p drains their
+        # messages sequentially (receive occupancy).
+        for c in tree.children.get(p, []):
+            c_done = finish(c)
+            (msg,) = phase.msgs[c]
+            lvl = topo.level_of_edge(c, p)
+            arrival = c_done + lvl.latency + msg.nbytes / lvl.bandwidth
+            t = max(t, arrival) + lvl.overhead
+        done[p] = t
+        return t
+
+    # Leaves are "done" immediately; completion of the phase per rank: a rank
+    # finishes when its own up-message has been *injected* (it is then free),
+    # the root when it has folded everything.
+    finish(tree.root)
+    pm = tree.parent_map()
+    out = {}
+    for p in tree.members():
+        if p == tree.root:
+            out[p] = done[p]
+        else:
+            (msg,) = phase.msgs[p]
+            lvl = topo.level_of_edge(p, pm[p])
+            out[p] = done[p] + lvl.occupy(msg.nbytes)
+    return out
+
+
+def simulate_op(op_fn, tree, topo: Topology, nbytes: float) -> float:
+    """Convenience: max completion time of op_fn(tree, nbytes) on topo."""
+    sched = op_fn(tree, nbytes) if nbytes is not None else op_fn(tree)
+    return max(simulate(sched, topo).values())

@@ -1,0 +1,187 @@
+"""Multilevel network topology description.
+
+The paper (Karonis et al., 2002) replaces MPICH-G2's "hidden communicators"
+with *integer coordinate vectors*: every process carries one group id per
+network stratum (site, machine, ...).  The communication level between two
+processes is the first stratum at which their coordinates diverge.  This
+module is the direct JAX-era port of that representation.
+
+Strata are ordered coarsest (slowest links) first.  A topology with ``S``
+strata has ``S + 1`` link classes ("levels"):
+
+  level 0      — used when coords differ in column 0        (e.g. WAN)
+  level l      — coords agree on columns < l, differ at l   (e.g. LAN)
+  level S      — all columns agree: intra-leaf-group links  (e.g. SMP bus)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Level",
+    "Topology",
+    "paper_fig8_topology",
+    "tpu_v5e_multipod",
+    "magpie_machine_view",
+    "magpie_site_view",
+    "flat_view",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """Link class parameters under the postal model.
+
+    latency    seconds from send start until first byte visible at receiver
+    bandwidth  bytes / second on the link
+    overhead   seconds the *sender* is occupied per message (postal ``o``)
+    """
+
+    name: str
+    latency: float
+    bandwidth: float
+    overhead: float = 0.0
+
+    def xfer(self, nbytes: float) -> float:
+        """End-to-end time for one message of ``nbytes``."""
+        return self.latency + nbytes / self.bandwidth
+
+    def occupy(self, nbytes: float) -> float:
+        """Time the sender is busy injecting one message of ``nbytes``."""
+        return self.overhead + nbytes / self.bandwidth
+
+
+class Topology:
+    """A multilevel topology: per-process coordinate vectors + link classes.
+
+    coords : (P, S) int array.  Column ``l`` is the group id of each process
+        at stratum ``l`` (0 = coarsest).  Group ids only need to be unique
+        *within* the parent group path, but we canonicalise them to be
+        globally unique per column for simplicity.
+    levels : S + 1 ``Level`` objects, coarsest first.
+    """
+
+    def __init__(self, coords: np.ndarray, levels: Sequence[Level]):
+        coords = np.asarray(coords, dtype=np.int64)
+        if coords.ndim == 1:
+            coords = coords[:, None]
+        if len(levels) != coords.shape[1] + 1:
+            raise ValueError(
+                f"need {coords.shape[1] + 1} levels for {coords.shape[1]} "
+                f"strata, got {len(levels)}"
+            )
+        # Canonicalise: make each column's group ids encode the full path so
+        # that equal ids in column l imply equal ids in all columns < l.
+        canon = np.zeros_like(coords)
+        for l in range(coords.shape[1]):
+            path = coords[:, : l + 1]
+            _, canon[:, l] = np.unique(path, axis=0, return_inverse=True)
+        self.coords = canon
+        self.levels = tuple(levels)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def nprocs(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def nstrata(self) -> int:
+        return self.coords.shape[1]
+
+    def comm_level(self, p: int, q: int) -> int:
+        """Index of the link class used between processes p and q."""
+        if p == q:
+            raise ValueError("no self link")
+        diff = np.nonzero(self.coords[p] != self.coords[q])[0]
+        return int(diff[0]) if diff.size else self.nstrata
+
+    def level_of_edge(self, p: int, q: int) -> Level:
+        return self.levels[self.comm_level(p, q)]
+
+    def groups_at(self, members: Sequence[int], stratum: int) -> dict[int, list[int]]:
+        """Partition ``members`` by their group id at ``stratum``.
+
+        Insertion order follows the order of ``members`` so tree builders are
+        deterministic given the member ordering (paper §3.2: every process
+        builds the identical tree with no communication).
+        """
+        out: dict[int, list[int]] = {}
+        for m in members:
+            out.setdefault(int(self.coords[m, stratum]), []).append(m)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def collapse(self, stratum: int) -> "Topology":
+        """A 2-level view keeping only one stratum (MagPIe-style baseline)."""
+        return Topology(
+            self.coords[:, stratum : stratum + 1],
+            [self.levels[stratum], self.levels[-1]],
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"Topology(P={self.nprocs}, strata={self.nstrata}, "
+            f"levels={[l.name for l in self.levels]})"
+        )
+
+
+# ---------------------------------------------------------------------- #
+# Canned topologies
+# ---------------------------------------------------------------------- #
+
+# Link classes of the paper's era (order-of-magnitude figures: TCP over WAN,
+# TCP over LAN, shared-memory/switch inside a machine).
+WAN = Level("wan", latency=30e-3, bandwidth=1.25e6, overhead=50e-6)     # ~10 Mb/s, 30 ms
+LAN = Level("lan", latency=1e-3, bandwidth=12.5e6, overhead=20e-6)      # ~100 Mb/s, 1 ms
+SMP = Level("smp", latency=30e-6, bandwidth=100e6, overhead=5e-6)       # intra-machine
+
+# TPU v5e-era link classes for the Grid->TPU mapping (per chip).
+DCN = Level("dcn", latency=10e-6, bandwidth=6.25e9, overhead=2e-6)      # inter-pod
+ICI_FAR = Level("ici_far", latency=3e-6, bandwidth=50e9, overhead=1e-6)  # cross-slice ICI hops
+ICI = Level("ici", latency=1e-6, bandwidth=100e9, overhead=0.5e-6)      # neighbour ICI
+
+
+def paper_fig8_topology() -> Topology:
+    """The paper's experiment: 16 procs on each of SDSC-SP, ANL-SP, ANL-O2K.
+
+    Two sites (SDSC, ANL); ANL holds two machines.  Strata = [site, machine].
+    """
+    site = [0] * 16 + [1] * 32
+    machine = [0] * 16 + [1] * 16 + [2] * 16
+    coords = np.stack([site, machine], axis=1)
+    return Topology(coords, [WAN, LAN, SMP])
+
+
+def tpu_v5e_multipod(pods: int = 2, boards: int = 16, chips_per_board: int = 16) -> Topology:
+    """A multi-pod TPU fleet: strata = [pod, board(=sub-slice)]; leaves = chips."""
+    P = pods * boards * chips_per_board
+    idx = np.arange(P)
+    pod = idx // (boards * chips_per_board)
+    board = idx // chips_per_board
+    coords = np.stack([pod, board], axis=1)
+    return Topology(coords, [DCN, ICI_FAR, ICI])
+
+
+def magpie_machine_view(topo: Topology) -> Topology:
+    """MagPIe baseline A: 2-level clustering on *machine* boundaries."""
+    return topo.collapse(topo.nstrata - 1)
+
+
+def magpie_site_view(topo: Topology) -> Topology:
+    """MagPIe baseline B: 2-level clustering on *site* boundaries."""
+    return topo.collapse(0)
+
+
+def flat_view(topo: Topology) -> Topology:
+    """Topology-unaware view: every pair communicates at the SLOWEST class.
+
+    This models MPICH's assumption of uniform point-to-point cost; the
+    simulator still charges true per-edge costs — ``flat_view`` is used only
+    to *build* the (oblivious) tree, mirroring how MPICH's binomial tree is
+    laid out over ranks with no topology knowledge.
+    """
+    coords = np.zeros((topo.nprocs, 1), dtype=np.int64)
+    return Topology(coords, [topo.levels[0], topo.levels[-1]])

@@ -1,0 +1,291 @@
+"""Tree builders: flat, binomial, chain, postal-optimal — and the paper's
+MULTILEVEL composer.
+
+A tree is represented explicitly (paper §3.2 replaced hidden communicators
+with integer vectors precisely to gain this freedom): ``Tree`` maps each rank
+to an *ordered* list of children.  Children order matters under the postal
+model — a parent injects messages sequentially, so larger subtrees are served
+first.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .topology import Topology
+
+__all__ = [
+    "Tree",
+    "flat_tree",
+    "binomial_tree",
+    "chain_tree",
+    "postal_tree",
+    "build_multilevel_tree",
+    "LevelPolicy",
+    "PAPER_POLICY",
+]
+
+
+@dataclasses.dataclass
+class Tree:
+    root: int
+    children: dict[int, list[int]]  # rank -> ordered children
+
+    # ------------------------------------------------------------------ #
+    def members(self) -> list[int]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(reversed(self.children.get(n, [])))
+        return out
+
+    def parent_map(self) -> dict[int, int]:
+        return {c: p for p, cs in self.children.items() for c in cs}
+
+    def subtree_sizes(self) -> dict[int, int]:
+        sizes: dict[int, int] = {}
+
+        def rec(n: int) -> int:
+            s = 1 + sum(rec(c) for c in self.children.get(n, []))
+            sizes[n] = s
+            return s
+
+        rec(self.root)
+        return sizes
+
+    def depth(self) -> int:
+        def rec(n: int) -> int:
+            cs = self.children.get(n, [])
+            return 1 + max((rec(c) for c in cs), default=0)
+
+        return rec(self.root) - 1
+
+    def validate(self) -> None:
+        """Spanning-tree invariants (used by property tests)."""
+        seen = self.members()
+        assert len(seen) == len(set(seen)), "duplicate rank in tree"
+        pm = self.parent_map()
+        assert self.root not in pm, "root has a parent"
+        assert set(pm) | {self.root} == set(seen)
+
+
+# ---------------------------------------------------------------------- #
+# Single-level builders.  All take (root, members) where members includes
+# the root, and are deterministic in the order of `members`.
+# ---------------------------------------------------------------------- #
+
+def _rotate(root: int, members: Sequence[int]) -> list[int]:
+    """members with root first, preserving relative order of the rest."""
+    rest = [m for m in members if m != root]
+    if len(rest) == len(members):
+        raise ValueError("root not in members")
+    return [root] + rest
+
+
+def flat_tree(root: int, members: Sequence[int]) -> Tree:
+    """Root sends directly to everyone — optimal on high-latency links
+    (Bar-Noy & Kipnis), used by the paper at the wide-area level."""
+    order = _rotate(root, members)
+    return Tree(root, {root: order[1:]})
+
+
+def binomial_tree(root: int, members: Sequence[int]) -> Tree:
+    """Classic binomial tree B_k over n ranks; the i-th child of the root is
+    the root of B_{k-i} (largest subtree served first)."""
+    order = _rotate(root, members)
+    n = len(order)
+    children: dict[int, list[int]] = {m: [] for m in order}
+    # In round r, node i (< 2^r) sends to i + 2^r.  Natural round order IS
+    # largest-subtree-first: a child acquired earlier has more remaining
+    # rounds to fan out (paper's B_k: the i-th child roots B_{k-i}).
+    r = 0
+    while (1 << r) < n:
+        for i in range(min(1 << r, n - (1 << r))):
+            children[order[i]].append(order[i + (1 << r)])
+        r += 1
+    return Tree(root, {m: cs for m, cs in children.items() if cs})
+
+
+def chain_tree(root: int, members: Sequence[int]) -> Tree:
+    """Pipeline chain — optimal for very large segmented messages."""
+    order = _rotate(root, members)
+    return Tree(root, {order[i]: [order[i + 1]] for i in range(len(order) - 1)})
+
+
+def postal_tree(root: int, members: Sequence[int], lam: int = 2) -> Tree:
+    """Bar-Noy & Kipnis postal-model optimal tree for integer latency ``lam``
+    (in units of sender overhead).  lam=1 degenerates to the binomial tree;
+    large lam approaches the flat tree.
+
+    N(t) = N(t-1) + N(t-lam): a node that finishes receiving at time T can
+    start new sends at T, T+1, ...; each lands lam later.
+    """
+    lam = max(1, int(lam))
+    order = _rotate(root, members)
+    n = len(order)
+    if n == 1:
+        return Tree(root, {})
+    # Find minimal completion time t with N(t) >= n.
+    N = [1]
+    while N[-1] < n:
+        t = len(N)
+        N.append(N[t - 1] + (N[t - lam] if t - lam >= 0 else 1))
+
+    children: dict[int, list[int]] = {m: [] for m in order}
+    next_free = 1  # next unassigned index in `order`
+
+    def grow(node_idx: int, recv_time: int, deadline: int) -> None:
+        nonlocal next_free
+        t = recv_time
+        while t + lam <= deadline and next_free < n:
+            child = next_free
+            next_free += 1
+            children[order[node_idx]].append(order[child])
+            grow(child, t + lam, deadline)
+            t += 1
+
+    grow(0, 0, len(N) - 1)
+    # Any stragglers (rounding) hang off the root, flat.
+    while next_free < n:
+        children[order[0]].append(order[next_free])
+        next_free += 1
+    return Tree(root, {m: cs for m, cs in children.items() if cs})
+
+
+BUILDERS: dict[str, Callable[[int, Sequence[int]], Tree]] = {
+    "flat": flat_tree,
+    "binomial": binomial_tree,
+    "chain": chain_tree,
+    "postal": postal_tree,
+}
+
+
+# ---------------------------------------------------------------------- #
+# The paper's multilevel composer (§2.3, §3.2).
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class LevelPolicy:
+    """Tree shape per level: shapes[l] for the inter-group tree at stratum l,
+    shapes[-1] for the leaf level.  Paper's choice: flat at the wide-area
+    level, binomial below (§3.2).  Shapes may carry a postal parameter, e.g.
+    "postal:3"."""
+
+    shapes: tuple[str, ...]
+
+    def builder(self, level: int) -> Callable[[int, Sequence[int]], Tree]:
+        shape = self.shapes[min(level, len(self.shapes) - 1)]
+        if shape.startswith("postal:"):
+            lam = int(shape.split(":")[1])
+            return lambda r, m: postal_tree(r, m, lam=lam)
+        return BUILDERS[shape]
+
+
+PAPER_POLICY = LevelPolicy(("flat", "binomial", "binomial"))
+ALL_BINOMIAL = LevelPolicy(("binomial",))
+
+
+def adaptive_policy(topo, nbytes: float) -> LevelPolicy:
+    """Beyond-paper (the paper's §6 future work): pick each level's tree
+    shape from the Bar-Noy & Kipnis latency ratio of that level's links.
+
+    lambda_l = (full message time) / (sender occupancy) — when a sender can
+    inject many messages before the first lands, flat trees win (pipelined
+    latency); when injection is as expensive as delivery (bandwidth-bound or
+    intra-machine), binomial wins; in between, the postal tree with
+    parameter round(lambda) is optimal.
+    """
+    shapes = []
+    for lvl in topo.levels:
+        xfer = lvl.latency + nbytes / lvl.bandwidth
+        occupy = max(lvl.occupy(nbytes), 1e-12)
+        lam = xfer / occupy
+        if lam <= 1.5:
+            shapes.append("binomial")
+        elif lam >= 64:
+            shapes.append("flat")
+        else:
+            shapes.append(f"postal:{max(2, int(round(lam)))}")
+    return LevelPolicy(tuple(shapes))
+
+
+def best_tree(topo, root: int, op_name: str, nbytes: float,
+              members: Sequence[int] | None = None) -> Tree:
+    """Beyond-paper: cost-model-DRIVEN tree selection.
+
+    The multilevel tree minimises slow-link message counts but concentrates
+    bandwidth-bound gathers/scatters onto one slow link (EXPERIMENTS
+    §Reproduction, honest negatives).  Since every process can simulate any
+    schedule deterministically (the same property §3.2 exploits for tree
+    construction), we simply simulate the candidates on the postal model and
+    pick the argmin — zero communication, identical choice everywhere.
+    """
+    from . import schedule as S
+    from .simulator import simulate
+
+    ops = {"bcast": S.bcast, "reduce": S.reduce, "gather": S.gather,
+           "scatter": S.scatter, "allreduce": S.allreduce,
+           "allgather": S.allgather}
+    op = ops[op_name]
+    if members is None:
+        members = list(range(topo.nprocs))
+    candidates = [
+        build_multilevel_tree(topo, root, members, PAPER_POLICY),
+        build_multilevel_tree(topo, root, members,
+                              adaptive_policy(topo, nbytes)),
+        binomial_tree(root, members),
+    ]
+    times = [max(simulate(op(t, nbytes), topo).values()) for t in candidates]
+    return candidates[times.index(min(times))]
+
+
+def build_multilevel_tree(
+    topo: Topology,
+    root: int,
+    members: Sequence[int] | None = None,
+    policy: LevelPolicy = PAPER_POLICY,
+) -> Tree:
+    """Construct the multilevel topology-aware tree, deterministically.
+
+    Mirrors MPICH-G2: cluster at the coarsest stratum, pick one coordinator
+    per group (the root's group keeps the root; other groups use their first
+    member in rank order), build the inter-group tree over coordinators with
+    the level's shape, then recurse within each group.  At a node, slow-level
+    children are served before fast-level children (root sends across the WAN
+    first — Fig. 4).
+    """
+    if members is None:
+        members = list(range(topo.nprocs))
+    members = list(members)
+    if root not in members:
+        raise ValueError("root must be a member")
+
+    def rec(root: int, members: list[int], stratum: int) -> Tree:
+        if len(members) == 1:
+            return Tree(root, {})
+        if stratum == topo.nstrata:
+            return policy.builder(stratum)(root, members)
+        groups = topo.groups_at(members, stratum)
+        if len(groups) == 1:
+            return rec(root, members, stratum + 1)
+        coordinators = []
+        root_gid = int(topo.coords[root, stratum])
+        for gid, gmembers in groups.items():
+            coordinators.append(root if gid == root_gid else gmembers[0])
+        inter = policy.builder(stratum)(root, coordinators)
+        # Recurse inside every group and graft under its coordinator.
+        children: dict[int, list[int]] = {}
+        for gid, gmembers in groups.items():
+            coord = root if gid == root_gid else gmembers[0]
+            sub = rec(coord, gmembers, stratum + 1)
+            for p, cs in sub.children.items():
+                children.setdefault(p, []).extend(cs)
+        # Prepend inter-group (slow) children so they are served first.
+        for p, cs in inter.children.items():
+            children[p] = cs + children.get(p, [])
+        return Tree(root, children)
+
+    tree = rec(root, members, 0)
+    tree.validate()
+    return tree

@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and should be False
+on real TPU; the flag is threaded, never hard-coded, so the same call sites
+run in both environments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import quant as _q
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=_fa.DEFAULT_BLOCK_Q, block_k=_fa.DEFAULT_BLOCK_K,
+                    interpret=not _ON_TPU):
+    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pad", "interpret"))
+def _quantize_padded(x, pad, interpret):
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    return _q.quantize_int8(xp, interpret=interpret)
+
+
+def quantize_int8(x, *, interpret=not _ON_TPU):
+    """Returns (q, scales, pad) — pad is a python int for the dequant call."""
+    pad = int((-x.size) % (_q.QBLOCK * _q.TILE))
+    q, s = _quantize_padded(x, pad, interpret)
+    return q, s, pad
+
+
+@functools.partial(jax.jit, static_argnames=("pad", "interpret"))
+def dequantize_int8(q, scales, pad=0, *, interpret=not _ON_TPU):
+    x = _q.dequantize_int8(q, scales, interpret=interpret)
+    return x[: x.size - pad] if pad else x

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: blockwise symmetric int8 quantise / dequantise.
+
+Used by the slow-link (DCN) gradient compressor — the perf-critical inner
+loop of the paper-inspired topology-aware compression: gradients cross the
+pod boundary as int8 + per-block f32 scales (~0.26x of f32 wire bytes).
+
+VMEM tiling: TILE quant blocks of QBLOCK elements each per grid step; both
+are multiples of the 128-lane VPU width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256       # elements sharing one scale (matches core.compression)
+TILE = 32          # quant blocks per grid step -> 8192 elements per stage
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (TILE, QBLOCK)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = q * s_ref[...][:, None]
+
+
+def quantize_int8(x: jax.Array, *, interpret: bool = True):
+    """x: 1-D f32, length divisible by QBLOCK*TILE (callers pad).
+    Returns (q int8 [N], scales f32 [N/QBLOCK])."""
+    assert x.ndim == 1 and x.size % (QBLOCK * TILE) == 0, x.shape
+    nblk = x.size // QBLOCK
+    xb = x.reshape(nblk, QBLOCK)
+    grid = (nblk // TILE,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((nblk,), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q.reshape(-1), s
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    assert q.ndim == 1 and q.size % (QBLOCK * TILE) == 0, q.shape
+    nblk = q.size // QBLOCK
+    qb = q.reshape(nblk, QBLOCK)
+    grid = (nblk // TILE,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.float32),
+        interpret=interpret,
+    )(qb, scales)
+    return x.reshape(-1)

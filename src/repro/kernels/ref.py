@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jax.Array:
+    """Naive O(S^2) GQA attention.  q:(B,Sq,H,hd) k/v:(B,Sk,Hkv,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def quantize_int8_reference(x: jax.Array, block: int = QBLOCK):
+    xb = x.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_int8_reference(q: jax.Array, scales: jax.Array,
+                              block: int = QBLOCK) -> jax.Array:
+    return (q.reshape(-1, block).astype(jnp.float32)
+            * scales[:, None]).reshape(-1)

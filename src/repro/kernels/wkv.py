@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: RWKV-6 chunked WKV recurrence (one head-block step).
+
+The linear-attention state update S_t = diag(w_t) S_{t-1} + k_t v_t^T with
+per-step output o_t = r_t S_{t-1} + (r_t . (u*k_t)) v_t is the compute
+hot-spot of the rwkv6-1.6b architecture.  The chunked form (intra-chunk
+factored decays + inter-chunk state) is exactly `models.layers._wkv_chunk_
+scan`; this kernel executes ONE (batch*head, chunk) tile with the state
+carried in VMEM scratch across the chunk-grid dimension.
+
+Grid: (B*H, n_chunks) with n_chunks "arbitrary" so the state scratch
+persists across chunk steps.  All matmul dims are the head dim (64/128),
+padded to MXU lanes by the caller if needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 16
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)        # decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)        # (1, hd) bonus
+    S = s_ref[...]                          # (hd, hd) carried state
+
+    logw = jnp.log(jnp.maximum(w, 1e-8))
+    e = jnp.exp(jnp.cumsum(logw, axis=0))           # e_t = prod_{j<=t} w_j
+    e_excl = e / jnp.maximum(w, 1e-8)               # prod_{j<t}
+    # inter-chunk: o_t += (r_t * e_excl_t) @ S_prev
+    o = jax.lax.dot_general(r * e_excl, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk: scores_{t,j} = (r_t*e_excl_t) . (k_j/e_j), j < t
+    kk = k / jnp.maximum(e, 1e-30)
+    sc = jax.lax.dot_general(r * e_excl, kk, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    C = sc.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    sc = jnp.where(row > col, sc, 0.0)
+    o = o + jax.lax.dot_general(sc, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # diagonal bonus
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True)
+    o = o + bonus * v
+    o_ref[0] = o.astype(o_ref.dtype)
+    # state to next chunk: S = diag(e_C) S + sum_j diag(e_C/e_j) k_j v_j^T
+    eC = e[-1:]                                     # (1, hd)
+    s_ref[...] = eC.T * S + jax.lax.dot_general(
+        (kk * eC).astype(jnp.float32), v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def wkv_chunked(r, k, v, w, u, *, chunk: int = CHUNK,
+                interpret: bool = True):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd).  Returns o: (B,S,H,hd) f32.
+
+    S must divide by ``chunk`` (callers pad, as models.layers does)."""
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    def fold(x):  # (B,S,H,hd) -> (B*H, S, hd)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, n_chunks=n),
+        grid=(B * H, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,193 @@
+"""Collective census over lowered/compiled HLO text.
+
+cost_analysis() has no collective-byte information, so we parse the HLO:
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its wire bytes, classified by whether its
+replica groups cross a pod boundary (DCN) or stay inside a pod (ICI) under
+the row-major (pod, data, model) device flattening.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+__all__ = ["census", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*(?:,|$)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                             r"(?:T\(([\d,]+)\))?")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Total bytes of the first shape (incl. tuple elements) in ``txt``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size_and_span(line: str, chips_per_pod: int) -> tuple[int, bool]:
+    """(participants per group, crosses_pod)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format: [ngroups,group_size]<=[dims](T(perm))
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        # reconstruct the first group's device ids
+        total = math.prod(dims)
+        tdims = [dims[p] for p in perm]
+        ids = []
+        for flat in range(total):
+            # unindex in transposed space, then map back to linear id
+            rem, coord = flat, []
+            for d in reversed(tdims):
+                coord.append(rem % d)
+                rem //= d
+            coord = coord[::-1]
+            orig = [0] * len(dims)
+            for i, p in enumerate(perm):
+                orig[p] = coord[i]
+            lin = 0
+            for i, d in enumerate(dims):
+                lin = lin * d + orig[i]
+            ids.append(lin)
+            if len(ids) >= gsize:
+                break
+        crosses = len({i // chips_per_pod for i in ids}) > 1
+        return gsize, crosses
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        ids = [int(x) for x in first.split(",") if x.strip()]
+        crosses = len({i // chips_per_pod for i in ids}) > 1
+        return max(len(ids), 1), crosses
+    return 1, False
+
+
+# computation headers sit at column 0: "%name (params...) -> type {"
+# (params may contain nested tuple parens, so don't try to match them)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"?(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
+                      r"[={]*%?([\w.\-]+)")
+
+
+def _loop_multipliers(hlo_text: str) -> dict[str, int]:
+    """computation name -> total dynamic execution count multiplier.
+
+    XLA HLO text prints each while body ONCE; a collective inside a
+    scan-over-layers body runs trip_count times per step.  We walk
+    computation headers, record which computations are while bodies (and
+    their known_trip_count), and propagate multipliers through nesting.
+    """
+    parent: dict[str, tuple[str, int]] = {}  # comp -> (enclosing comp, trip)
+    current = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        mh = _COMP_RE.match(line)  # headers are unindented
+        if mh and line[0] not in " \t":
+            current = mh.group(1)
+            continue
+        if current is None:
+            continue
+        if " while(" in ls:
+            trip = _TRIP_RE.search(ls)
+            t = int(trip.group(1)) if trip else 1
+            for rex in (_WHILE_BODY_RE, _WHILE_COND_RE):
+                mb = rex.search(ls)
+                if mb:
+                    parent[mb.group(1)] = (current, t)
+        else:
+            for mc in _CALL_RE.finditer(ls):
+                parent.setdefault(mc.group(1), (current, 1))
+
+    mult: dict[str, int] = {}
+
+    def total(comp: str, depth=0) -> int:
+        if depth > 20 or comp not in parent:
+            return 1
+        if comp in mult:
+            return mult[comp]
+        up, t = parent[comp]
+        mult[comp] = t * total(up, depth + 1)
+        return mult[comp]
+
+    return {c: total(c) for c in set(parent)}
+
+
+def census(hlo_text: str, chips_per_pod: int) -> dict:
+    """PER-CHIP wire bytes by (collective kind, level) + op counts.
+
+    Wire-byte model per participating chip (ring algorithms):
+      all-reduce:          2 * bytes * (n-1)/n
+      all-gather:          out_bytes * (n-1)/n
+      reduce-scatter:      shard_bytes * (n-1)
+      all-to-all:          bytes * (n-1)/n
+      collective-permute:  bytes
+
+    Collectives inside while loops (scan-over-layers, chunked attention)
+    are multiplied by their known trip counts.
+    """
+    mults = _loop_multipliers(hlo_text)
+    out = {"ici_bytes": 0.0, "dcn_bytes": 0.0,
+           "counts": defaultdict(int), "ops": []}
+    current = None
+    for line in hlo_text.splitlines():
+        mh = _COMP_RE.match(line)
+        if mh and line and line[0] not in " \t":
+            current = mh.group(1)
+            continue
+        ls = line.strip()
+        if ls.startswith("ROOT "):
+            ls = ls[5:]
+        # result may be a TUPLE shape with /*index=N*/ comments (XLA's
+        # collective combiner merges many psums into one tuple all-reduce)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s*"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind, phase = m.group(2), m.group(3)
+        if phase == "-done":  # avoid double counting async pairs
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        n, crosses = _group_size_and_span(ls, chips_per_pod)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * nbytes * frac
+        elif kind == "collective-permute":
+            wire = float(nbytes)
+        elif kind == "reduce-scatter":
+            # result shape is the 1/n shard; wire = shard * (n-1)
+            wire = nbytes * (n - 1)
+        else:
+            wire = nbytes * frac
+        k = mults.get(current, 1)
+        wire *= k
+        key = "dcn_bytes" if crosses else "ici_bytes"
+        out[key] += wire
+        out["counts"][f"{kind}{'/dcn' if crosses else '/ici'}"] += k
+        out["ops"].append({"kind": kind, "bytes": nbytes, "group": n,
+                           "dcn": crosses, "x": k})
+    out["counts"] = dict(out["counts"])
+    return out

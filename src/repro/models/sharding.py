@@ -1,0 +1,104 @@
+"""Parameter / activation sharding rules (GSPMD side).
+
+Topology-aware placement, per the paper's principle: the tensor-parallel
+(`model`) axis — whose collectives run every layer — is always mapped to the
+innermost, fastest mesh dimension and NEVER crosses a pod boundary; the
+data-parallel axes (`pod`, `data`) carry only one gradient collective per
+step, which `repro.core.collectives` decomposes multileveled.
+
+Rules are name-based over the param pytree; any dimension that does not
+divide the model-axis size falls back to replicated and GSPMD propagation
+fills the gap (e.g. 24-head attention on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "param_shardings", "batch_pspec", "dp_axes"]
+
+# leaf name -> which logical dim to shard over "model"
+#   "col": shard the LAST dim (output features)
+#   "row": shard the SECOND-TO-LAST dim (input features)
+#   "expert": shard the expert dim (ndim-3 with run stacking)
+#   None: replicate
+_RULES: dict[str, str | None] = {
+    "embed": "vocab", "lm_head": "col",
+    "wq": "col", "wk": "col", "wv": "col", "wo": "row",
+    "wi": "col", "wg": "col",
+    "router": None,
+    "w_in": "expert", "w_out": "expert",
+    "w_x": "col", "w_a": "col", "w_i": "col",
+    "conv": None, "lam": None,
+    "w_r": "col", "w_k": "col", "w_v": "col", "w_g": "col", "w_w": "col",
+    "w_o": "row", "u": None, "mix": None,
+    "cm_k": "col", "cm_v": "row", "cm_r": "col", "cm_mix": None,
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _spec_for(name: str, shape: tuple[int, ...], model_size: int) -> P:
+    if model_size <= 1:
+        return P()
+    rule = _RULES.get(name)
+    # MoE gate weight shares the "w_gate" name with RG-LRU's input gate:
+    # disambiguate on rank (expert tensors are 4-D once run-stacked).
+    if name == "w_gate":
+        rule = "expert" if len(shape) >= 4 else "col"
+    if rule is None:
+        return P()
+    dims: list[Any] = [None] * len(shape)
+    if rule == "vocab":
+        axis = 0
+    elif rule == "col":
+        axis = len(shape) - 1
+    elif rule == "row":
+        axis = len(shape) - 2
+    elif rule == "expert":
+        axis = len(shape) - 3
+    else:
+        return P()
+    if shape[axis] % model_size != 0:
+        # fall back: try the other matmul dim, else replicate
+        alt = len(shape) - 1 if rule in ("row", "expert") else len(shape) - 2
+        if 0 <= alt < len(shape) and shape[alt] % model_size == 0 and alt != axis:
+            axis = alt
+        else:
+            return P()
+    dims[axis] = "model"
+    return P(*dims)
+
+
+def param_pspecs(params: Any, model_size: int) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (model axis only)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_leaf_name(path), leaf.shape, model_size),
+        params,
+    )
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    model_size = mesh.shape.get("model", 1)
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params, model_size),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes present in the mesh, slowest first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """Batch dim sharded over every data-parallel axis."""
+    return P(dp_axes(mesh))

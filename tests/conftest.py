@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet in a subprocess with N host platform devices.
+
+    Multi-device collective tests must not pollute the main pytest process
+    (which keeps the default 1-device view per the project brief).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    # persistent compile cache: repeat suite runs skip the expensive jits
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_cache_tests")
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "1")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests + decode/prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    if cfg.enc_dec:
+        return {"src_embeds": jax.random.normal(KEY, (B, 8, cfg.d_model),
+                                                jnp.bfloat16),
+                "tokens": jnp.ones((B, S), jnp.int32),
+                "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        return {"embeds": jax.random.normal(KEY, (B, 4, cfg.d_model),
+                                            jnp.bfloat16),
+                "tokens": jnp.ones((B, S - 4), jnp.int32),
+                "labels": jnp.ones((B, S - 4), jnp.int32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one SGD-style grad step, no NaNs."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_model(KEY, cfg)
+    batch = _batch(cfg)
+    logits = T.model_fwd(params, cfg, batch)
+    S_tok = batch["tokens"].shape[1]
+    n_prefix = 0 if cfg.enc_dec else (4 if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, S_tok + n_prefix, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(g.astype(jnp.float32)).sum())
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen3_4b",            # GQA + qk_norm
+    "gemma3_12b",          # 5:1 local:global windows
+    "olmoe_1b_7b",         # MoE top-8
+    "recurrentgemma_2b",   # RG-LRU + local attn
+    "rwkv6_1p6b",          # attention-free
+    "seamless_m4t_medium", # enc-dec cross-attention
+    "pixtral_12b",         # vision prefix
+])
+def test_prefill_decode_matches_full_forward(arch):
+    """prefill(S) + decode(1) must equal the full forward over S+1 tokens."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_model(KEY, cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    inp_full = {"tokens": toks}
+    inp_pre = {"tokens": toks[:, :S]}
+    prefix = 0
+    if cfg.enc_dec:
+        src = jax.random.normal(KEY, (B, 4, cfg.d_model), jnp.bfloat16)
+        inp_full["src_embeds"] = inp_pre["src_embeds"] = src
+    if cfg.frontend == "vision":
+        emb = jax.random.normal(KEY, (B, 4, cfg.d_model), jnp.bfloat16)
+        inp_full["embeds"] = inp_pre["embeds"] = emb
+        prefix = 4
+    full = T.model_fwd(params, cfg, inp_full)
+    logits_p, cache, pos = T.prefill(params, cfg, inp_pre, s_max=S + prefix + 4)
+    logits_d, _ = T.decode_step(params, cfg, cache, toks[:, S:S + 1],
+                                jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(full[:, prefix + S - 1]),
+                               atol=0.08, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(full[:, prefix + S]),
+                               atol=0.08, rtol=0.05)
+
+
+def test_sliding_window_cache_wraps():
+    """Decode past the window: entries must wrap and old keys be masked."""
+    cfg = get_config("gemma3_12b", smoke=True)  # window=8 after shrink
+    params = T.init_model(KEY, cfg)
+    B, S = 1, 8
+    toks = jax.random.randint(KEY, (B, S + 4), 0, cfg.vocab)
+    full = T.model_fwd(params, cfg, {"tokens": toks})
+    _, cache, pos = T.prefill(params, cfg, {"tokens": toks[:, :S]},
+                              s_max=S + 8)
+    p = jnp.int32(pos)
+    for i in range(4):  # decode 4 tokens past the window boundary
+        logits_d, cache = T.decode_step(params, cfg, cache,
+                                        toks[:, S + i:S + i + 1], p + i)
+        np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                                   np.asarray(full[:, S + i]),
+                                   atol=0.1, rtol=0.05)
+
+
+def test_param_count_sane():
+    """Full-config param counts in the right ballpark for the known models."""
+    expect = {"tinyllama_1p1b": (0.9e9, 1.4e9),
+              "qwen3_4b": (3e9, 5e9),
+              "gemma3_12b": (9e9, 14e9),
+              "olmoe_1b_7b": (5e9, 8.5e9),
+              "rwkv6_1p6b": (1.2e9, 2.2e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("olmoe_1b_7b")
+    assert cfg.active_param_count() < cfg.param_count() * 0.4

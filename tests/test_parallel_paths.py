@@ -1,0 +1,92 @@
+"""Regression tests for the explicit-parallelism paths added in §Perf:
+expert-parallel MoE (nested shard_map) and flash-decode (sequence-sharded
+KV cache with LSE combine).  Both must be numerically equivalent to the
+single-device reference paths."""
+import pytest
+
+
+def test_ep_moe_matches_reference(subproc):
+    subproc("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.sharding import param_pspecs
+cfg = get_config("olmoe_1b_7b", smoke=True)
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                       capacity_factor=4.0))
+p = L.init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+y_ref = L.moe_fwd(p, cfg, x)                       # no mesh -> ragged path
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+psh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_pspecs(p, 2),
+                   is_leaf=lambda v: isinstance(v, P))
+pd = jax.device_put(p, psh)
+xd = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
+with jax.set_mesh(mesh):
+    y_ep = jax.jit(lambda pp, xx: L.moe_fwd(pp, cfg, xx))(pd, xd)
+np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref), atol=2e-4)
+# chunked scan path must agree with the one-shot path
+y_chunked = L.moe_fwd(p, cfg, x, chunk=16)
+np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_ref), atol=2e-4)
+print("OK")
+""")
+
+
+def test_ep_moe_capacity_drops_bounded(subproc):
+    """With the default capacity factor some tokens may drop under extreme
+    imbalance; the output must stay finite and close to reference."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.sharding import param_pspecs
+cfg = get_config("llama4_scout_17b_a16e", smoke=True)  # top-1, shared expert
+p = L.init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
+y_ref = L.moe_fwd(p, cfg, x)
+mesh = jax.make_mesh((1, 2, 2), ("pod", "data", "model"))
+psh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_pspecs(p, 2),
+                   is_leaf=lambda v: isinstance(v, P))
+pd = jax.device_put(p, psh)
+with jax.set_mesh(mesh):
+    y_ep = jax.jit(lambda pp, xx: L.moe_fwd(pp, cfg, xx))(pd, x)
+assert bool(jnp.isfinite(y_ep).all())
+# tolerate capacity drops: relative Frobenius error small
+rel = float(jnp.linalg.norm(y_ep - y_ref) / jnp.linalg.norm(y_ref))
+assert rel < 0.3, rel  # tiny-T smoke is adversarial for top-1 capacity
+print("OK rel", rel)
+""")
+
+
+def test_sp_flash_decode_matches_full_forward(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.launch import step as STEP
+from repro.launch.mesh import make_test_mesh
+from repro.models.sharding import param_shardings
+for arch in ["qwen3_4b", "gemma3_12b"]:   # full + sliding-window caches
+    cfg = get_config(arch, smoke=True)
+    mesh = make_test_mesh(pods=1, data=2, model=2)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, param_shardings(params, mesh))
+    B, S = 4, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 2), 0, cfg.vocab)
+    full = T.model_fwd(params, cfg, {"tokens": toks})
+    with jax.set_mesh(mesh):
+        _, cache, pos = jax.jit(lambda p, t: T.prefill(
+            p, cfg, {"tokens": t}, s_max=S + 4))(params, toks[:, :S])
+        c_sh = STEP.cache_shardings(cfg, mesh, jax.eval_shape(lambda: cache))
+        cache = jax.device_put(cache, c_sh)
+        dec = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, c, t, i))
+        l1, cache = dec(params, cache, toks[:, S:S+1], jnp.int32(pos))
+        l2, cache = dec(params, cache, toks[:, S+1:S+2], jnp.int32(pos + 1))
+    np.testing.assert_allclose(np.asarray(l1[:, 0]), np.asarray(full[:, S]),
+                               atol=0.1, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(l2[:, 0]), np.asarray(full[:, S+1]),
+                               atol=0.1, rtol=0.05)
+print("OK")
+""")

@@ -1,0 +1,141 @@
+"""Property-based tests of the paper's tree builders and multilevel composer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology, WAN, LAN, SMP, paper_fig8_topology
+from repro.core.trees import (binomial_tree, flat_tree, chain_tree,
+                              postal_tree, build_multilevel_tree,
+                              PAPER_POLICY, LevelPolicy, Tree)
+from repro.core.tree_exec import tree_rounds
+
+
+@st.composite
+def topologies(draw):
+    """Random 2-strata topologies (sites -> machines -> procs)."""
+    sites = draw(st.integers(1, 4))
+    coords = []
+    mid = 0
+    for s in range(sites):
+        machines = draw(st.integers(1, 3))
+        for m in range(machines):
+            procs = draw(st.integers(1, 5))
+            coords += [[s, mid]] * procs
+            mid += 1
+    return Topology(np.array(coords), [WAN, LAN, SMP])
+
+
+@given(st.integers(1, 64), st.integers(0, 63))
+def test_binomial_tree_invariants(n, root_idx):
+    members = list(range(n))
+    root = members[root_idx % n]
+    t = binomial_tree(root, members)
+    t.validate()
+    assert sorted(t.members()) == members
+    rounds = 0 if n == 1 else int(np.ceil(np.log2(n)))
+    # tree depth bounded by the round count; schedule takes exactly `rounds`
+    assert t.depth() <= rounds
+    if n > 1:
+        assert len(tree_rounds(t)) == rounds
+
+
+@given(st.integers(1, 40), st.sampled_from(["flat", "chain"]))
+def test_flat_chain_invariants(n, kind):
+    members = list(range(n))
+    t = flat_tree(0, members) if kind == "flat" else chain_tree(0, members)
+    t.validate()
+    assert sorted(t.members()) == members
+    if kind == "flat":
+        assert t.depth() <= 1
+    else:
+        assert t.depth() == n - 1
+
+
+@given(st.integers(1, 50), st.integers(1, 6))
+def test_postal_tree_spanning(n, lam):
+    t = postal_tree(0, list(range(n)), lam=lam)
+    t.validate()
+    assert sorted(t.members()) == list(range(n))
+
+
+@settings(deadline=None, max_examples=60)
+@given(topologies(), st.data())
+def test_multilevel_tree_properties(topo, data):
+    root = data.draw(st.integers(0, topo.nprocs - 1))
+    t = build_multilevel_tree(topo, root)
+    t.validate()
+    assert sorted(t.members()) == list(range(topo.nprocs))
+    # THE paper's claim: exactly (#groups at stratum 0) - 1 edges cross the
+    # slowest level, and within each site exactly (#machines - 1) edges cross
+    # the LAN level.
+    lvl_count = {0: 0, 1: 0, 2: 0}
+    for p, cs in t.children.items():
+        for c in cs:
+            lvl_count[topo.comm_level(p, c)] += 1
+    n_sites = len(set(topo.coords[:, 0]))
+    n_machines = len(set(topo.coords[:, 1]))
+    assert lvl_count[0] == n_sites - 1
+    assert lvl_count[1] == n_machines - n_sites
+    assert lvl_count[2] == topo.nprocs - n_machines
+
+
+@settings(deadline=None, max_examples=30)
+@given(topologies(), st.data())
+def test_tree_rounds_schedule(topo, data):
+    """Round schedule: every non-root receives exactly once, senders only
+    send after receiving, one injection per sender per round."""
+    root = data.draw(st.integers(0, topo.nprocs - 1))
+    t = build_multilevel_tree(topo, root)
+    rounds = tree_rounds(t)
+    received = {root: -1}
+    for r, edges in enumerate(rounds):
+        senders = [s for s, _ in edges]
+        assert len(senders) == len(set(senders)), "double injection"
+        for s, d in edges:
+            assert s in received and received[s] < r
+            assert d not in received, "duplicate receive"
+            received[d] = r
+    assert set(received) == set(t.members())
+
+
+def test_fig8_tree_is_fig4():
+    """The paper's Fig. 4 example: root at SDSC -> exactly one WAN edge, one
+    LAN edge between the two NCSA/ANL machines."""
+    topo = paper_fig8_topology()
+    t = build_multilevel_tree(topo, root=0, policy=PAPER_POLICY)
+    wan = [(p, c) for p, cs in t.children.items() for c in cs
+           if topo.comm_level(p, c) == 0]
+    lan = [(p, c) for p, cs in t.children.items() for c in cs
+           if topo.comm_level(p, c) == 1]
+    assert len(wan) == 1 and wan[0][0] == 0
+    assert len(lan) == 1
+    # root serves its WAN child first (Fig. 4: slow edges go first)
+    assert topo.comm_level(0, t.children[0][0]) == 0
+
+
+def test_root_not_first_member():
+    topo = paper_fig8_topology()
+    t = build_multilevel_tree(topo, root=40)  # inside the 3rd machine
+    t.validate()
+    assert t.root == 40
+
+
+def test_best_tree_is_argmin_of_candidates():
+    """Beyond-paper: cost-model-driven selection never loses to either the
+    multilevel tree or the oblivious binomial on any (op, size) — closing
+    the gather/scatter bandwidth-concentration weakness."""
+    from repro.core import schedule as S
+    from repro.core.simulator import simulate
+    from repro.core.trees import best_tree
+
+    topo = paper_fig8_topology()
+    for op in ("bcast", "reduce", "gather", "scatter", "allreduce"):
+        for nb in (1e3, 512e3):
+            fn = getattr(S, op)
+            t_ml = max(simulate(fn(build_multilevel_tree(topo, 0), nb),
+                                topo).values())
+            t_bin = max(simulate(fn(binomial_tree(0, range(topo.nprocs)), nb),
+                                 topo).values())
+            t_best = max(simulate(fn(best_tree(topo, 0, op, nb), nb),
+                                  topo).values())
+            assert t_best <= min(t_ml, t_bin) + 1e-12, (op, nb)
