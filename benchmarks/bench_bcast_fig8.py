@@ -8,6 +8,10 @@ every rank taking a turn as root, comparing
   multilevel       (the paper, flat-at-WAN / binomial below)
   adaptive         (beyond-paper: per-level Bar-Noy/Kipnis shape selection)
 
+Each variant is one :class:`repro.core.Communicator`: the baselines build
+their trees against a collapsed/oblivious *view* while the simulator still
+charges true per-edge costs (``view=`` parameter).
+
 Topology: 16 procs on each of SDSC-SP, ANL-SP, ANL-O2K (sites SDSC/ANL),
 link classes calibrated to 2002-era WAN/LAN/SMP.  Output: CSV
 ``size_bytes,variant,sum_over_roots_seconds`` — same metric as Fig. 8
@@ -17,44 +21,41 @@ from __future__ import annotations
 
 import sys
 
-from repro.core import schedule as S
-from repro.core.simulator import simulate
+from repro.core import Communicator
 from repro.core.topology import (paper_fig8_topology, magpie_machine_view,
                                  magpie_site_view)
-from repro.core.trees import (binomial_tree, build_multilevel_tree,
-                              PAPER_POLICY, adaptive_policy)
 
 SIZES = [1 << k for k in range(10, 21)]  # 1 KB .. 1 MB
 ROOT_STRIDE = 4  # every 4th rank as root (48 roots -> 12; same shape, 4x faster)
 
 
-def variants(topo):
+def variants(topo) -> dict[str, Communicator]:
     return {
-        "mpich-binomial": lambda root, nb: binomial_tree(
-            root, range(topo.nprocs)),
-        "magpie-machine": lambda root, nb: build_multilevel_tree(
-            magpie_machine_view(topo), root),
-        "magpie-site": lambda root, nb: build_multilevel_tree(
-            magpie_site_view(topo), root),
-        "multilevel": lambda root, nb: build_multilevel_tree(
-            topo, root, policy=PAPER_POLICY),
-        "adaptive": lambda root, nb: build_multilevel_tree(
-            topo, root, policy=adaptive_policy(topo, nb)),
+        "mpich-binomial": Communicator(topo, policy="oblivious"),
+        "magpie-machine": Communicator(topo, policy="paper",
+                                       view=magpie_machine_view(topo)),
+        "magpie-site": Communicator(topo, policy="paper",
+                                    view=magpie_site_view(topo)),
+        "multilevel": Communicator(topo, policy="paper"),
+        "adaptive": Communicator(topo, policy="adaptive"),
     }
 
 
 def run(out=sys.stdout) -> dict:
     topo = paper_fig8_topology()
+    comms = variants(topo)
     results: dict[str, list[tuple[int, float]]] = {}
     print("size_bytes,variant,sum_over_roots_s", file=out)
     for nb in SIZES:
-        for name, mk in variants(topo).items():
+        for name, comm in comms.items():
             total = 0.0
             for root in range(0, topo.nprocs, ROOT_STRIDE):
-                tree = mk(root, nb)
-                total += max(simulate(S.bcast(tree, nb), topo).values())
+                total += comm.bcast(float(nb), root=root).time
             results.setdefault(name, []).append((nb, total))
             print(f"{nb},{name},{total:.4f}", file=out)
+    for name, comm in comms.items():
+        # stderr: keeps the stdout stream pure CSV for naive consumers
+        print(f"{name} plan cache: {comm.cache_info()}", file=sys.stderr)
     return results
 
 

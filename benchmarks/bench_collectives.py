@@ -1,5 +1,6 @@
 """All five paper collectives (+ allreduce/allgather extensions) across
-topologies and regimes — one row per (op, topology, size, variant).
+topologies and regimes — one row per (op, topology, size, variant), driven
+entirely through the public :class:`repro.core.Communicator` API.
 
 Also reports the observed trade-off table: where multilevel wins (latency /
 message-count bound) and where bandwidth concentration loses (large gather/
@@ -11,16 +12,16 @@ import sys
 
 import numpy as np
 
-from repro.core import schedule as S
-from repro.core.simulator import simulate
+from repro.core import OPS, Communicator
 from repro.core.topology import (Topology, WAN, LAN, SMP,
                                  paper_fig8_topology, tpu_v5e_multipod)
-from repro.core.trees import (binomial_tree, build_multilevel_tree,
-                              PAPER_POLICY, adaptive_policy)
 
-OPS = {"bcast": S.bcast, "reduce": S.reduce, "barrier": None,
-       "gather": S.gather, "scatter": S.scatter, "allreduce": S.allreduce,
-       "allgather": S.allgather}
+# variant name -> Communicator tree-selection policy
+VARIANTS = {
+    "binomial-oblivious": "oblivious",
+    "multilevel": "paper",
+    "adaptive": "adaptive",
+}
 
 
 def many_clusters():
@@ -36,27 +37,35 @@ TOPOLOGIES = {
 }
 
 
+def run_op(comm: Communicator, op: str, nbytes: float):
+    """One collective through the public API (uniform over the seven ops)."""
+    if op == "barrier":
+        return comm.barrier()
+    if OPS[op].rootful:
+        return getattr(comm, op)(nbytes, root=0)
+    return getattr(comm, op)(nbytes)
+
+
 def run(out=sys.stdout) -> list[dict]:
     rows = []
     print("topology,op,size_bytes,variant,seconds", file=out)
     for tname, topo in TOPOLOGIES.items():
-        for oname, op in OPS.items():
+        comms = {v: Communicator(topo, policy=p, backend="sim")
+                 for v, p in VARIANTS.items()}
+        for oname, spec in OPS.items():
             for nb in (1e3, 64e3):
-                for vname, tree in {
-                    "binomial-oblivious": binomial_tree(0, range(topo.nprocs)),
-                    "multilevel": build_multilevel_tree(topo, 0,
-                                                        policy=PAPER_POLICY),
-                    "adaptive": build_multilevel_tree(
-                        topo, 0, policy=adaptive_policy(topo, nb)),
-                }.items():
-                    sched = S.barrier(tree) if op is None else op(tree, nb)
-                    t = max(simulate(sched, topo).values())
+                for vname, comm in comms.items():
+                    t = run_op(comm, oname, nb).time
                     rows.append({"topology": tname, "op": oname,
                                  "size": nb, "variant": vname, "s": t})
                     print(f"{tname},{oname},{nb:.0f},{vname},{t:.6f}",
                           file=out)
-                if op is None:
+                if not spec.sized:
                     break  # barrier has no size sweep
+        for vname, comm in comms.items():
+            # stderr: keeps the stdout stream pure CSV for naive consumers
+            print(f"{tname}/{vname} plan cache: {comm.cache_info()}",
+                  file=sys.stderr)
     return rows
 
 

@@ -1,44 +1,52 @@
-"""Quickstart: the paper's multilevel topology-aware collectives in 60 lines.
+"""Quickstart: the paper's multilevel topology-aware collectives behind the
+one public entry point, :class:`repro.core.Communicator`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import schedule as S
-from repro.core.simulator import simulate
-from repro.core.topology import paper_fig8_topology, magpie_site_view
-from repro.core.trees import (binomial_tree, build_multilevel_tree,
-                              PAPER_POLICY, adaptive_policy)
+from repro.core import Communicator, paper_fig8_topology
+from repro.core.topology import magpie_site_view
 
 # 1. Describe the network as integer coordinate vectors (site, machine) —
 #    here: the paper's own testbed, 16 procs on each of 3 machines, 2 sites.
 topo = paper_fig8_topology()
 print(topo)
 
-# 2. Build broadcast trees rooted at rank 0 under different views.
-oblivious = binomial_tree(0, range(topo.nprocs))          # MPICH default
-two_level = build_multilevel_tree(magpie_site_view(topo), 0)   # MagPIe
-multilevel = build_multilevel_tree(topo, 0, policy=PAPER_POLICY)  # the paper
+# 2. One communicator per tree-selection policy.  Baselines build their
+#    trees against a reduced *view* of the network; the simulator still
+#    charges true per-edge costs.
+comms = {
+    "mpich-binomial": Communicator(topo, policy="oblivious"),      # MPICH
+    "magpie-site": Communicator(topo, policy="paper",
+                                view=magpie_site_view(topo)),      # MagPIe
+    "multilevel": Communicator(topo, policy="paper"),              # the paper
+}
 
-# The multilevel tree crosses the WAN exactly once:
-wan_edges = [(p, c) for p, cs in multilevel.children.items() for c in cs
-             if topo.comm_level(p, c) == 0]
-print(f"multilevel tree: {len(wan_edges)} WAN edge(s)  "
-      f"(root's first child is across the WAN: {multilevel.children[0][0]})")
+# The multilevel plan crosses the WAN exactly once (paper Fig. 4):
+ml = comms["multilevel"]
+print(f"multilevel bcast plan: {ml.slow_crossings('bcast', nbytes=256e3)} "
+      f"WAN edge(s); root serves its WAN child first: "
+      f"{ml.plan('bcast', root=0, nbytes=256e3).tree.children[0][0]}")
 
 # 3. Simulate a 256 KB broadcast on the postal model.
-for name, tree in [("mpich-binomial", oblivious),
-                   ("magpie-site", two_level),
-                   ("multilevel", multilevel)]:
-    t = max(simulate(S.bcast(tree, 256e3), topo).values())
-    print(f"{name:16s} bcast 256KB: {t*1e3:8.2f} ms")
+for name, comm in comms.items():
+    print(f"{name:16s} bcast 256KB: {comm.bcast(256e3, root=0).time*1e3:8.2f} ms")
 
-# 4. Beyond the paper: per-level tree-shape selection (its §6 future work).
-adaptive = build_multilevel_tree(topo, 0, policy=adaptive_policy(topo, 256e3))
-t = max(simulate(S.bcast(adaptive, 256e3), topo).values())
-print(f"{'adaptive':16s} bcast 256KB: {t*1e3:8.2f} ms")
+# 4. Beyond the paper: per-level tree-shape selection (its §6 future work),
+#    and the cost-model argmin over all candidates ("auto").
+for policy in ("adaptive", "auto"):
+    comm = Communicator(topo, policy=policy)
+    print(f"{policy:16s} bcast 256KB: {comm.bcast(256e3, root=0).time*1e3:8.2f} ms")
 
-# 5. All five paper collectives work over any tree:
-for op in (S.reduce, S.gather, S.scatter):
-    t = max(simulate(op(multilevel, 64e3), topo).values())
-    print(f"{op.__name__:16s} 64KB multilevel: {t*1e3:8.2f} ms")
-t = max(simulate(S.barrier(multilevel), topo).values())
-print(f"{'barrier':16s} multilevel: {t*1e3:8.2f} ms")
+# 5. All seven collectives go through the same object:
+for op in ("reduce", "gather", "scatter", "allreduce", "allgather"):
+    t = getattr(ml, op)(64e3, root=0).time if op in ("reduce", "gather", "scatter") \
+        else getattr(ml, op)(64e3).time
+    print(f"{op:16s} 64KB multilevel: {t*1e3:8.2f} ms")
+print(f"{'barrier':16s} multilevel: {ml.barrier().time*1e3:8.2f} ms")
+
+# 6. Plans are cached — the second identical call rebuilds nothing:
+before = ml.cache_info()
+ml.bcast(256e3, root=0)
+after = ml.cache_info()
+print(f"plan cache: +{after.hits - before.hits} hit, "
+      f"tree builds unchanged: {after.tree_builds == before.tree_builds}")

@@ -1,0 +1,80 @@
+"""Version-compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern mesh-context API (``jax.shard_map``
+with ``axis_names=``/``check_vma=``, ``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``).  Older toolchains (jax 0.4.x) expose the
+same machinery as ``jax.experimental.shard_map.shard_map`` with
+``auto=``/``check_rep=`` and no abstract-mesh context.  Importing from here
+instead of from ``jax`` keeps every explicitly-meshed path working on both;
+mesh-less (abstract-mesh-inferred) shard_maps degrade to a clear
+``NotImplementedError`` on old jax, and the model code guards those paths via
+:func:`get_abstract_mesh` returning ``None``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "get_abstract_mesh"]
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+              check_vma: bool | None = None):
+    """Portable shard_map.
+
+    ``axis_names`` follows the NEW convention: the set of mesh axes that are
+    MANUAL inside ``f`` (all axes when None).  ``check_vma`` maps onto legacy
+    ``check_rep``; left unset it keeps the upstream default on modern jax and
+    disables the legacy replication checker (which false-positives on the
+    partial-permute programs this repo traces).
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kw = dict(in_specs=in_specs, out_specs=out_specs)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    if mesh is None:
+        def _unsupported(*_a, **_k):
+            raise NotImplementedError(
+                "mesh-less (abstract-mesh-inferred) shard_map requires a "
+                f"newer jax than {jax.__version__}; pass an explicit mesh "
+                "or upgrade")
+        return _unsupported
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy(f, mesh, in_specs, out_specs,
+                   check_rep=bool(check_vma) if check_vma is not None
+                   else False, auto=auto)
+
+
+def set_mesh(mesh):
+    """Context manager establishing ``mesh`` as the ambient device mesh.
+
+    Falls back to a null context on toolchains without a mesh-context API —
+    callers there must rely on explicit NamedShardings (the model code's
+    abstract-mesh fast paths are guarded off via :func:`get_abstract_mesh`).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when unsupported/absent."""
+    try:
+        return jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        return None

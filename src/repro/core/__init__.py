@@ -1,3 +1,40 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Topology-aware collective operations (the paper's system plane).
+
+Public API — one front door:
+
+  :class:`Communicator`   build once per (topology, policy, backend), then
+                          call ``bcast/reduce/barrier/gather/scatter/
+                          allreduce/allgather``; plans are cached.
+
+Supporting vocabulary re-exported for construction and inspection:
+topologies (:class:`Topology` + canned grids), tree builders and policies,
+the op dispatch table, and simulation results.
+
+The heavier device modules (:mod:`repro.core.collectives`,
+:mod:`repro.core.tree_exec`) import jax and are pulled in lazily by the
+``jax``/``ppermute`` backends — importing :mod:`repro.core` stays light for
+simulator-only use.
+"""
+from .communicator import (BACKENDS, CacheInfo, Communicator, OPS, OpSpec,
+                           Plan, SimResult, register_op, select_tree,
+                           size_bucket)
+from .topology import (Level, Topology, flat_view, magpie_machine_view,
+                       magpie_site_view, paper_fig8_topology,
+                       tpu_v5e_multipod)
+from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
+                    binomial_tree, build_multilevel_tree, chain_tree,
+                    flat_tree, postal_tree)
+
+__all__ = [
+    # the front door
+    "Communicator", "Plan", "SimResult", "CacheInfo",
+    # op dispatch
+    "OPS", "OpSpec", "register_op", "select_tree", "size_bucket", "BACKENDS",
+    # topology
+    "Topology", "Level", "paper_fig8_topology", "tpu_v5e_multipod",
+    "magpie_machine_view", "magpie_site_view", "flat_view",
+    # trees & policies
+    "Tree", "LevelPolicy", "PAPER_POLICY", "adaptive_policy",
+    "binomial_tree", "build_multilevel_tree", "chain_tree", "flat_tree",
+    "postal_tree",
+]

@@ -1,6 +1,12 @@
 """JAX hierarchical (axis-decomposed) collectives — the paper's technique as
 it applies to TPU training.
 
+ENGINE MODULE: these are the primitives behind the ``backend="jax"`` path of
+:class:`repro.core.communicator.Communicator`, which is the public entry
+point (``Communicator(topo, backend="jax", slow_axis=..., fast_axes=...)``;
+``allreduce_tree`` for fused gradient pytrees).  Call these directly only
+when composing new inside-shard_map code.
+
 The Grid mapping: the ``pod`` mesh axis is the WAN (slow DCN links), the
 intra-pod axes are the LAN/machine levels (fast ICI).  The paper's rule —
 *minimise traffic on the slowest level* — becomes, for a data-parallel

@@ -1,0 +1,610 @@
+"""The single public entry point for topology-aware collectives.
+
+The paper (Karonis et al. §3.2) replaces MPICH-G2's hidden communicators with
+explicit multilevel topology so every process can deterministically build the
+same tree.  This module is the communicator-shaped front door over that
+machinery: a :class:`Communicator` owns a :class:`~repro.core.topology.Topology`,
+selects trees under a policy, **caches plans** so repeated collectives stop
+re-running tree construction / cost-model argmin / round scheduling, and
+dispatches to pluggable backends:
+
+``"sim"``
+    Postal-model simulator (:mod:`repro.core.simulator`).  Operands are byte
+    counts; results are :class:`SimResult` per-rank completion times.  This is
+    the reproduction/benchmark plane.
+``"jax"``
+    Axis-decomposed device collectives where XLA has a shortcut
+    (:mod:`repro.core.collectives`): reduce-scatter intra-pod, exchange across
+    pods, all-gather intra-pod.  Operands are jax arrays inside ``shard_map``
+    over ``(slow_axis, *fast_axes)``.
+``"ppermute"``
+    The faithful §3.2 port (:mod:`repro.core.tree_exec`): one
+    ``collective_permute`` per tree round over a single flattened mesh axis.
+    Used for root-ful ops (bcast/reduce/gather/...) where XLA has no
+    axis-decomposed shortcut.
+
+Quickstart::
+
+    topo = paper_fig8_topology()
+    comm = Communicator(topo, policy="paper", backend="sim")
+    t = comm.bcast(256e3, root=0).time          # seconds, postal model
+    comm.cache_info()                           # plan-cache hits/misses
+
+Ops live in a dispatch table (:data:`OPS`) that replaces the string-keyed
+dict formerly buried in ``trees.best_tree``; new collectives register with
+:func:`register_op`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+from . import schedule as S
+from .simulator import simulate
+from .topology import Topology
+from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
+                    binomial_tree, build_multilevel_tree)
+
+__all__ = [
+    "OpSpec",
+    "OPS",
+    "register_op",
+    "size_bucket",
+    "select_tree",
+    "Plan",
+    "PlanCache",
+    "CacheInfo",
+    "SimResult",
+    "Communicator",
+    "BACKENDS",
+]
+
+
+# ---------------------------------------------------------------------- #
+# Op dispatch table.
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One collective: how to schedule it over a tree and its data flow.
+
+    ``schedule(tree, nbytes) -> Schedule`` is the simulator-plane form;
+    backends with device execution provide their own methods keyed by name.
+    ``rootful`` ops have a distinguished root (bcast/reduce/gather/scatter);
+    ``sized`` ops take a byte count (barrier does not).
+    """
+
+    name: str
+    schedule: Callable[[Tree, float], S.Schedule]
+    rootful: bool
+    sized: bool = True
+
+
+OPS: dict[str, OpSpec] = {}
+
+
+def register_op(name: str, schedule: Callable, *, rootful: bool,
+                sized: bool = True) -> OpSpec:
+    """Register a collective in the dispatch table (idempotent overwrite)."""
+    spec = OpSpec(name, schedule, rootful=rootful, sized=sized)
+    OPS[name] = spec
+    return spec
+
+
+register_op("bcast", S.bcast, rootful=True)
+register_op("reduce", S.reduce, rootful=True)
+register_op("barrier", lambda tree, nbytes=0.0: S.barrier(tree),
+            rootful=False, sized=False)
+register_op("gather", S.gather, rootful=True)
+register_op("scatter", S.scatter, rootful=True)
+register_op("allreduce", S.allreduce, rootful=False)
+register_op("allgather", S.allgather, rootful=False)
+
+
+# ---------------------------------------------------------------------- #
+# Tree selection (the cost-model argmin that used to be trees.best_tree).
+# ---------------------------------------------------------------------- #
+
+def size_bucket(nbytes: float) -> int:
+    """Power-of-two bucket for plan-cache keys: tree *choice* (adaptive /
+    cost-model policies) is size-dependent, but varies slowly enough that one
+    plan per size octave is the right cache granularity."""
+    if nbytes is None or nbytes <= 0:
+        return -1
+    return max(0, int(math.log2(nbytes)))
+
+
+def select_tree(topo: Topology, root: int, op: str, nbytes: float,
+                members: Sequence[int] | None = None,
+                policy: Any = "auto",
+                view: Topology | None = None) -> tuple[Tree, int]:
+    """Pick the tree for ``op`` under ``policy``; returns (tree, n_built).
+
+    ``view`` builds the tree against a *different* (e.g. collapsed MagPIe, or
+    deliberately oblivious) topology while the caller still charges costs on
+    the true one — how the paper's baselines are reproduced.
+
+    Policies: a :class:`LevelPolicy`, or one of
+      "paper"     — flat at the WAN, binomial below (the paper's choice)
+      "adaptive"  — per-level Bar-Noy/Kipnis shape from the latency ratio
+      "oblivious" — rank-order binomial, no topology knowledge (MPICH)
+      "auto"      — simulate paper/adaptive/oblivious candidates on the true
+                    topology and take the argmin (beyond-paper; every process
+                    reaches the identical choice with zero communication).
+    """
+    spec = OPS[op]
+    build_topo = view if view is not None else topo
+    if members is None:
+        members = list(range(build_topo.nprocs))
+    members = list(members)
+
+    if isinstance(policy, LevelPolicy):
+        return build_multilevel_tree(build_topo, root, members, policy), 1
+    if policy == "paper":
+        return build_multilevel_tree(build_topo, root, members,
+                                     PAPER_POLICY), 1
+    if policy == "adaptive":
+        return build_multilevel_tree(
+            build_topo, root, members,
+            adaptive_policy(build_topo, nbytes or 0.0)), 1
+    if policy == "oblivious":
+        return binomial_tree(root, members), 1
+    if policy in ("auto", "best"):
+        candidates = [
+            build_multilevel_tree(build_topo, root, members, PAPER_POLICY),
+            build_multilevel_tree(build_topo, root, members,
+                                  adaptive_policy(build_topo, nbytes or 0.0)),
+            binomial_tree(root, members),
+        ]
+        nb = nbytes or 0.0
+        times = [max(simulate(spec.schedule(t, nb), topo).values())
+                 for t in candidates]
+        return candidates[times.index(min(times))], len(candidates)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+# ---------------------------------------------------------------------- #
+# Plans and the plan cache.
+# ---------------------------------------------------------------------- #
+
+class Plan:
+    """A cached collective plan: the selected ``tree``, lazily-built message
+    ``schedule(nbytes)`` (memoised per exact size), and the static ppermute
+    ``rounds`` — everything that is pure function of (op, root, members,
+    size-bucket) and therefore reusable across calls."""
+
+    __slots__ = ("spec", "root", "tree", "_schedules", "_rounds")
+
+    def __init__(self, spec: OpSpec, root: int, tree: Tree):
+        self.spec = spec
+        self.root = root
+        self.tree = tree
+        self._schedules: dict[float, S.Schedule] = {}
+        self._rounds: list[list[tuple[int, int]]] | None = None
+
+    @property
+    def op(self) -> str:
+        return self.spec.name
+
+    def schedule(self, nbytes: float = 0.0) -> S.Schedule:
+        key = float(nbytes or 0.0)
+        if key not in self._schedules:
+            if len(self._schedules) >= 16:  # bound the per-size memo
+                self._schedules.clear()
+            self._schedules[key] = (self.spec.schedule(self.tree, key)
+                                    if self.spec.sized
+                                    else self.spec.schedule(self.tree))
+        return self._schedules[key]
+
+    @property
+    def rounds(self) -> list[list[tuple[int, int]]]:
+        if self._rounds is None:
+            from .tree_exec import tree_rounds  # lazy: pulls in jax
+            self._rounds = tree_rounds(self.tree)
+        return self._rounds
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Plan(op={self.op!r}, root={self.root}, "
+                f"|members|={len(self.tree.members())})")
+
+
+CacheInfo = collections.namedtuple(
+    "CacheInfo", ["hits", "misses", "currsize", "maxsize", "tree_builds"])
+
+
+class PlanCache:
+    """Tiny LRU keyed by (op, root, size-bucket, members)."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._d: collections.OrderedDict = collections.OrderedDict()
+
+    def get_or_build(self, key, build: Callable[[], Plan]) -> Plan:
+        if key in self._d:
+            self.hits += 1
+            self._d.move_to_end(key)
+            return self._d[key]
+        self.misses += 1
+        plan = build()
+        self._d[key] = plan
+        if len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+
+# ---------------------------------------------------------------------- #
+# Backends.
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Per-rank completion times of one simulated collective."""
+
+    op: str
+    root: int
+    nbytes: float
+    completion: dict[int, float]
+
+    @property
+    def time(self) -> float:
+        """Wall-clock of the collective: the last rank to finish."""
+        return max(self.completion.values())
+
+
+class SimBackend:
+    """Postal-model simulation: operands are byte counts."""
+
+    name = "sim"
+    needs_plan = True
+
+    def __init__(self, comm: "Communicator"):
+        self.comm = comm
+
+    def run(self, op: str, plan: Plan, x, root: int) -> SimResult:
+        nbytes = float(x) if OPS[op].sized else 0.0
+        completion = simulate(plan.schedule(nbytes), self.comm.topo)
+        return SimResult(op, root, nbytes, completion)
+
+
+class PpermuteBackend:
+    """Faithful §3.2 execution: one lax.ppermute per tree round, inside
+    shard_map over a single flattened mesh axis (``axis=``).  Root-ful ops
+    return zeros on non-root ranks (mirroring MPI out-buffer semantics)."""
+
+    name = "ppermute"
+    needs_plan = True
+
+    def __init__(self, comm: "Communicator"):
+        if comm.axis is None:
+            raise ValueError("backend='ppermute' requires axis=<mesh axis>")
+        self.comm = comm
+        self.axis = comm.axis
+
+    def run(self, op: str, plan: Plan, x, root: int):
+        return getattr(self, op)(plan, x, root)
+
+    # -- ops ----------------------------------------------------------- #
+    def bcast(self, plan, x, root):
+        from . import tree_exec as TE
+        return TE.tree_bcast(x, plan.tree, self.axis)
+
+    def reduce(self, plan, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        from . import tree_exec as TE
+        r = TE.tree_reduce(x, plan.tree, self.axis)
+        return jnp.where(lax.axis_index(self.axis) == root, r,
+                         jnp.zeros_like(r))
+
+    def allreduce(self, plan, x, root):
+        from . import tree_exec as TE
+        r = TE.tree_reduce(x, plan.tree, self.axis)
+        return TE.tree_bcast(r, plan.tree, self.axis)
+
+    def gather(self, plan, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        from . import tree_exec as TE
+        buf = TE.tree_gather_flat(x, plan.tree, self.axis,
+                                  len(self.comm.members))
+        return jnp.where(lax.axis_index(self.axis) == root, buf,
+                         jnp.zeros_like(buf))
+
+    def allgather(self, plan, x, root):
+        from . import tree_exec as TE
+        buf = TE.tree_gather_flat(x, plan.tree, self.axis,
+                                  len(self.comm.members))
+        return TE.tree_bcast(buf, plan.tree, self.axis)
+
+    def scatter(self, plan, x, root):
+        # Root holds the full [P, ...] buffer; ship it down the tree and let
+        # each rank slice its row.  (A trimming scatter that sends only each
+        # subtree's rows is the simulator-plane model; on-device we accept
+        # the bcast-sized payload for a fixed ppermute program.)
+        from jax import lax
+        from . import tree_exec as TE
+        full = TE.tree_bcast(x, plan.tree, self.axis)
+        idx = lax.axis_index(self.axis)
+        return lax.dynamic_index_in_dim(full, idx, axis=0, keepdims=False)
+
+    def barrier(self, plan, x, root):
+        import jax.numpy as jnp
+        from . import tree_exec as TE
+        token = jnp.zeros((), jnp.float32)
+        token = TE.tree_reduce(token, plan.tree, self.axis)
+        return TE.tree_bcast(token, plan.tree, self.axis)
+
+
+class JaxBackend:
+    """Axis-decomposed device collectives — the paths where XLA has a
+    shortcut.  Runs inside shard_map over ``(slow_axis, *fast_axes)``;
+    allreduce is the multilevel reduce-scatter/exchange/all-gather
+    decomposition, the rest lower to a single (masked) psum.
+
+    Rank space: flat row-major index over (slow_axis, *fast_axes) ONLY —
+    the communicator's topology/members must cover exactly those ranks
+    (``launch.mesh.mesh_communicator`` builds the dp-scoped topology for a
+    mesh that also has a model axis)."""
+
+    name = "jax"
+    needs_plan = False
+
+    def __init__(self, comm: "Communicator"):
+        if not comm.fast_axes and comm.slow_axis is None:
+            raise ValueError(
+                "backend='jax' requires slow_axis= and/or fast_axes=")
+        self.comm = comm
+        self.slow_axis = comm.slow_axis
+        self.fast_axes = tuple(comm.fast_axes)
+        self.axes = (((comm.slow_axis,) if comm.slow_axis else ())
+                     + self.fast_axes)
+
+    def run(self, op: str, plan, x, root: int):
+        return getattr(self, op)(x, root)
+
+    # -- helpers -------------------------------------------------------- #
+    def _index(self):
+        """Flat device rank in row-major (slow, *fast) order — matches the
+        member ordering of a Topology built over the same mesh."""
+        from jax import lax
+        idx = 0
+        for ax in self.axes:
+            idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
+        return idx
+
+    def _nranks(self) -> int:
+        from jax import lax
+        n = 1
+        for ax in self.axes:
+            n *= int(lax.psum(1, ax))
+        return n
+
+    # -- ops ------------------------------------------------------------ #
+    def allreduce(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        from .collectives import multilevel_psum
+        fast = 1
+        for ax in self.fast_axes:
+            fast *= int(lax.psum(1, ax))
+        shape = x.shape
+        flat = x.reshape(-1)
+        pad = (-flat.size) % max(fast, 1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        flat = multilevel_psum(flat, self.slow_axis, self.fast_axes)
+        if pad:
+            flat = flat[:flat.size - pad]
+        return flat.reshape(shape)
+
+    def bcast(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        masked = jnp.where(self._index() == root, x, jnp.zeros_like(x))
+        return lax.psum(masked, self.axes)
+
+    def reduce(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        full = lax.psum(x, self.axes)
+        return jnp.where(self._index() == root, full, jnp.zeros_like(full))
+
+    def gather(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        buf = self._placed(x)
+        full = lax.psum(buf, self.axes)
+        return jnp.where(self._index() == root, full, jnp.zeros_like(full))
+
+    def allgather(self, x, root):
+        from jax import lax
+        return lax.psum(self._placed(x), self.axes)
+
+    def scatter(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        masked = jnp.where(self._index() == root, x, jnp.zeros_like(x))
+        full = lax.psum(masked, self.axes)
+        return lax.dynamic_index_in_dim(full, self._index(), axis=0,
+                                        keepdims=False)
+
+    def barrier(self, x, root):
+        import jax.numpy as jnp
+        from jax import lax
+        return lax.psum(jnp.zeros((), jnp.float32), self.axes)
+
+    def _placed(self, x):
+        import jax.numpy as jnp
+        buf = jnp.zeros((self._nranks(),) + x.shape, x.dtype)
+        return buf.at[self._index()].set(x)
+
+
+BACKENDS: dict[str, type] = {
+    "sim": SimBackend,
+    "ppermute": PpermuteBackend,
+    "jax": JaxBackend,
+}
+
+
+# ---------------------------------------------------------------------- #
+# The communicator.
+# ---------------------------------------------------------------------- #
+
+class Communicator:
+    """Topology-aware collectives behind one object.
+
+    Parameters
+    ----------
+    topo : the true multilevel topology costs are charged on.
+    policy : "paper" | "adaptive" | "oblivious" | "auto" | LevelPolicy.
+    backend : "sim" | "jax" | "ppermute" (see module docstring).
+    members : participating ranks (default: all of ``topo``).
+    view : optional topology the *trees* are built against (MagPIe/oblivious
+        baselines) while simulation still charges true per-edge costs.
+    axis : flattened mesh axis name (ppermute backend).
+    slow_axis, fast_axes : mesh axis decomposition (jax backend).
+    """
+
+    def __init__(self, topo: Topology, *, policy: Any = "auto",
+                 backend: str = "sim",
+                 members: Sequence[int] | None = None,
+                 view: Topology | None = None,
+                 axis: str | None = None,
+                 slow_axis: str | None = None,
+                 fast_axes: Sequence[str] = (),
+                 cache_size: int = 128):
+        self.topo = topo
+        self.policy = policy
+        self.view = view
+        self.members = tuple(members if members is not None
+                             else range(topo.nprocs))
+        if not self.members:
+            raise ValueError("communicator needs at least one member")
+        self.axis = axis
+        self.slow_axis = slow_axis
+        self.fast_axes = tuple(fast_axes)
+        self.tree_builds = 0
+        # only these policies choose a different tree per size octave; for
+        # the rest, one plan per (op, root) serves every message size, so
+        # plan() inspection and execution always share a cache entry
+        self._size_dependent = policy in ("adaptive", "auto", "best")
+        self._cache = PlanCache(cache_size)
+        try:
+            backend_cls = BACKENDS[backend]
+        except KeyError:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {sorted(BACKENDS)}") from None
+        self.backend = backend_cls(self)
+
+    # -- planning -------------------------------------------------------- #
+    def plan(self, op: str, *, root: int | None = None,
+             nbytes: float = 0.0) -> Plan:
+        """The (cached) plan for one collective.  Key: (op, root,
+        size-bucket, members) — a second identical call re-runs nothing."""
+        spec = OPS[op]  # KeyError on unknown op is the dispatch contract
+        root = self.members[0] if root is None else root
+        if root not in self.members:
+            raise ValueError(f"root {root} is not a member")
+        bucket = (size_bucket(nbytes) if self._size_dependent and spec.sized
+                  else -1)
+        key = (op, root, bucket, self.members)
+
+        def build() -> Plan:
+            tree, built = select_tree(self.topo, root, op, nbytes,
+                                      members=self.members,
+                                      policy=self.policy, view=self.view)
+            self.tree_builds += built
+            return Plan(spec, root, tree)
+
+        return self._cache.get_or_build(key, build)
+
+    def cache_info(self) -> CacheInfo:
+        c = self._cache
+        return CacheInfo(c.hits, c.misses, len(c), c.maxsize,
+                         self.tree_builds)
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self.tree_builds = 0
+
+    # -- the seven collectives -------------------------------------------- #
+    def bcast(self, x, *, root: int = 0):
+        return self._run("bcast", x, root)
+
+    def reduce(self, x, *, root: int = 0):
+        return self._run("reduce", x, root)
+
+    def barrier(self):
+        return self._run("barrier", None, self.members[0])
+
+    def gather(self, x, *, root: int = 0):
+        return self._run("gather", x, root)
+
+    def scatter(self, x, *, root: int = 0):
+        return self._run("scatter", x, root)
+
+    def allreduce(self, x):
+        return self._run("allreduce", x, self.members[0])
+
+    def allgather(self, x):
+        return self._run("allgather", x, self.members[0])
+
+    def _run(self, op: str, x, root: int):
+        if root not in self.members:  # every backend, planned or not
+            raise ValueError(f"root {root} is not a member")
+        plan = None
+        if self.backend.needs_plan:
+            plan = self.plan(op, root=root, nbytes=self._nbytes_of(op, x))
+        return self.backend.run(op, plan, x, root)
+
+    def allreduce_tree(self, grads, *, mode: str = "multilevel",
+                       mean_over: int | None = None):
+        """All-reduce a gradient pytree (jax backend only): fuses all leaves
+        into one flat buffer per level — see collectives.multilevel_psum_tree."""
+        if not isinstance(self.backend, JaxBackend):
+            raise ValueError("allreduce_tree requires backend='jax'")
+        from .collectives import multilevel_psum_tree
+        return multilevel_psum_tree(grads, self.slow_axis, self.fast_axes,
+                                    mode=mode, mean_over=mean_over)
+
+    # -- introspection ----------------------------------------------------- #
+    def _nbytes_of(self, op: str, x) -> float:
+        if not OPS[op].sized or x is None:
+            return 0.0
+        if isinstance(x, (int, float)):
+            return float(x)
+        # device operand (tracer or array): bytes of the local shard
+        size = 1
+        for d in getattr(x, "shape", ()):
+            size *= int(d)
+        itemsize = getattr(getattr(x, "dtype", None), "itemsize", 4)
+        return float(size * itemsize)
+
+    def slow_crossings(self, op: str, *, root: int = 0,
+                       nbytes: float = 0.0) -> int:
+        """Edges of the plan's tree that cross the slowest level — the
+        paper's headline metric (log C -> C-1 -> 1 wide-area messages)."""
+        tree = self.plan(op, root=root, nbytes=nbytes).tree
+        return sum(1 for p, cs in tree.children.items() for c in cs
+                   if self.topo.comm_level(p, c) == 0)
+
+    def describe(self) -> str:
+        lv = "/".join(l.name for l in self.topo.levels)
+        pol = (self.policy if isinstance(self.policy, str)
+               else type(self.policy).__name__)
+        return (f"Communicator(P={len(self.members)}, levels={lv}, "
+                f"policy={pol}, backend={self.backend.name})")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self.describe()

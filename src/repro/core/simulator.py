@@ -51,26 +51,30 @@ def _run_up(phase, topo: Topology, start: float) -> dict[int, float]:
     tree = phase.tree
     done: dict[int, float] = {}
 
-    def finish(p: int) -> float:
-        """Time p has received (and folded) all of its subtree."""
-        if p in done:
-            return done[p]
+    # Iterative post-order (children before parent): deep trees — e.g. a
+    # chain over thousands of ranks — must not blow the recursion limit.
+    # done[p] = time p has received (and folded) all of its subtree.
+    # Children send as soon as their own subtrees finish; p drains their
+    # messages sequentially (receive occupancy).
+    stack: list[tuple[int, bool]] = [(tree.root, False)]
+    while stack:
+        p, expanded = stack.pop()
+        cs = tree.children.get(p, [])
+        if cs and not expanded:
+            stack.append((p, True))
+            stack.extend((c, False) for c in cs)
+            continue
         t = start
-        # Children send as soon as their own subtrees finish; p drains their
-        # messages sequentially (receive occupancy).
-        for c in tree.children.get(p, []):
-            c_done = finish(c)
+        for c in cs:
             (msg,) = phase.msgs[c]
             lvl = topo.level_of_edge(c, p)
-            arrival = c_done + lvl.latency + msg.nbytes / lvl.bandwidth
+            arrival = done[c] + lvl.latency + msg.nbytes / lvl.bandwidth
             t = max(t, arrival) + lvl.overhead
         done[p] = t
-        return t
 
     # Leaves are "done" immediately; completion of the phase per rank: a rank
     # finishes when its own up-message has been *injected* (it is then free),
     # the root when it has folded everything.
-    finish(tree.root)
     pm = tree.parent_map()
     out = {}
     for p in tree.members():

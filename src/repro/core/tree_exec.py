@@ -1,6 +1,11 @@
 """Execute the paper's explicit multilevel trees on devices with
 ``lax.ppermute`` rounds — the faithful §3.2 port.
 
+ENGINE MODULE: these are the primitives behind the ``backend="ppermute"``
+path of :class:`repro.core.communicator.Communicator`, which is the public
+entry point (``Communicator(topo, backend="ppermute", axis=...)``) and also
+caches the round schedules (``Plan.rounds``) across calls.
+
 MPICH-G2 §3.2: every process independently constructs the identical tree and
 executes it with point-to-point sends.  On TPU the point-to-point primitive
 is ``collective_permute``; one tree "round" (a set of disjoint (src,dst)

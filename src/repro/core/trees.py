@@ -6,6 +6,10 @@ with integer vectors precisely to gain this freedom): ``Tree`` maps each rank
 to an *ordered* list of children.  Children order matters under the postal
 model — a parent injects messages sequentially, so larger subtrees are served
 first.
+
+This module is the tree-construction ENGINE; user code should go through
+:class:`repro.core.communicator.Communicator`, which selects, caches, and
+executes trees behind one API.
 """
 from __future__ import annotations
 
@@ -44,30 +48,52 @@ class Tree:
         return {c: p for p, cs in self.children.items() for c in cs}
 
     def subtree_sizes(self) -> dict[int, int]:
+        # Iterative post-order: chains of 10k+ ranks must not hit the
+        # Python recursion limit.
         sizes: dict[int, int] = {}
-
-        def rec(n: int) -> int:
-            s = 1 + sum(rec(c) for c in self.children.get(n, []))
-            sizes[n] = s
-            return s
-
-        rec(self.root)
+        stack: list[tuple[int, bool]] = [(self.root, False)]
+        while stack:
+            n, expanded = stack.pop()
+            cs = self.children.get(n, [])
+            if cs and not expanded:
+                stack.append((n, True))
+                stack.extend((c, False) for c in cs)
+            else:
+                sizes[n] = 1 + sum(sizes[c] for c in cs)
         return sizes
 
     def depth(self) -> int:
-        def rec(n: int) -> int:
-            cs = self.children.get(n, [])
-            return 1 + max((rec(c) for c in cs), default=0)
-
-        return rec(self.root) - 1
+        best = 0
+        stack: list[tuple[int, int]] = [(self.root, 0)]
+        while stack:
+            n, d = stack.pop()
+            best = max(best, d)
+            stack.extend((c, d + 1) for c in self.children.get(n, []))
+        return best
 
     def validate(self) -> None:
-        """Spanning-tree invariants (used by property tests)."""
-        seen = self.members()
-        assert len(seen) == len(set(seen)), "duplicate rank in tree"
+        """Spanning-tree invariants; raises ValueError on violation (real
+        exceptions, not `assert` — they must survive ``python -O``).
+
+        Traverses with a seen-set rather than ``members()`` so that cyclic
+        children maps are reported as errors instead of looping forever.
+        """
+        seen: set[int] = set()
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n in seen:
+                raise ValueError(
+                    f"invalid tree: rank {n} reachable twice from root "
+                    f"{self.root} (duplicate child or cycle)")
+            seen.add(n)
+            stack.extend(self.children.get(n, []))
         pm = self.parent_map()
-        assert self.root not in pm, "root has a parent"
-        assert set(pm) | {self.root} == set(seen)
+        if self.root in pm:
+            raise ValueError(f"invalid tree: root {self.root} has a parent")
+        if set(pm) | {self.root} != seen:
+            raise ValueError("invalid tree: parent map does not cover "
+                             "exactly the reachable ranks")
 
 
 # ---------------------------------------------------------------------- #
@@ -212,32 +238,23 @@ def adaptive_policy(topo, nbytes: float) -> LevelPolicy:
 
 def best_tree(topo, root: int, op_name: str, nbytes: float,
               members: Sequence[int] | None = None) -> Tree:
-    """Beyond-paper: cost-model-DRIVEN tree selection.
+    """DEPRECATED shim — use ``Communicator(topo, policy="auto")`` instead.
 
-    The multilevel tree minimises slow-link message counts but concentrates
-    bandwidth-bound gathers/scatters onto one slow link (EXPERIMENTS
-    §Reproduction, honest negatives).  Since every process can simulate any
-    schedule deterministically (the same property §3.2 exploits for tree
-    construction), we simply simulate the candidates on the postal model and
-    pick the argmin — zero communication, identical choice everywhere.
+    The cost-model argmin (and the op dispatch table that used to live here
+    as a string-keyed dict) moved to :mod:`repro.core.communicator`, where
+    plans are also cached across calls.
     """
-    from . import schedule as S
-    from .simulator import simulate
+    import warnings
 
-    ops = {"bcast": S.bcast, "reduce": S.reduce, "gather": S.gather,
-           "scatter": S.scatter, "allreduce": S.allreduce,
-           "allgather": S.allgather}
-    op = ops[op_name]
-    if members is None:
-        members = list(range(topo.nprocs))
-    candidates = [
-        build_multilevel_tree(topo, root, members, PAPER_POLICY),
-        build_multilevel_tree(topo, root, members,
-                              adaptive_policy(topo, nbytes)),
-        binomial_tree(root, members),
-    ]
-    times = [max(simulate(op(t, nbytes), topo).values()) for t in candidates]
-    return candidates[times.index(min(times))]
+    warnings.warn(
+        "trees.best_tree is deprecated; use "
+        "repro.core.Communicator(topo, policy='auto').plan(op, ...).tree",
+        DeprecationWarning, stacklevel=2)
+    from .communicator import select_tree
+
+    tree, _ = select_tree(topo, root, op_name, nbytes,
+                          members=members, policy="auto")
+    return tree
 
 
 def build_multilevel_tree(

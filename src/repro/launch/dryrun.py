@@ -29,6 +29,8 @@ import traceback
 import numpy as np
 import jax
 
+from repro import compat
+
 from repro.configs import get_config, list_archs, SHAPES
 from repro.configs.shapes import input_specs, cache_specs, applicable
 from repro.core.costmodel import TPU_V5E, roofline_terms
@@ -89,7 +91,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         fn = jax.jit(raw, donate_argnums=(0, 1),
                      in_shardings=(p_sh, o_sh,
                                    jax.tree.map(lambda _: b_sh, batch)))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = fn.lower(aparams, aopt, batch)
             compiled = lowered.compile()
     elif shape.kind == "prefill":
@@ -100,7 +102,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         batch = input_specs(cfg, shape)
         fn = jax.jit(raw,
                      in_shardings=(p_sh, jax.tree.map(lambda _: b_sh, batch)))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = fn.lower(aparams, batch)
             compiled = lowered.compile()
     else:  # decode
@@ -115,7 +117,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         fn = jax.jit(raw, donate_argnums=(1,),
                      in_shardings=(p_sh, c_sh, tok_sh,
                                    NamedSharding(mesh, P())))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = fn.lower(aparams, acache, inp["tokens"],
                                inp["pos"])
             compiled = lowered.compile()

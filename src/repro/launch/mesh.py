@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "mesh_topology"]
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_topology",
+           "dp_topology", "dp_decomposition", "mesh_communicator"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -39,3 +40,51 @@ def mesh_topology(mesh) -> "object":
     idx = np.arange(P)
     coords = np.stack([idx // (data * model), idx // model], axis=1)
     return Topology(coords, [DCN, ICI_FAR, ICI])
+
+
+def dp_topology(mesh) -> "object":
+    """The core.Topology over the DATA-PARALLEL ranks only (pod x data),
+    matching the jax backend's flat (slow, *fast) index space — model-axis
+    peers hold distinct parameter shards and are not collective members."""
+    import numpy as np
+    from repro.core.topology import Topology, DCN, ICI
+
+    pods = mesh.shape.get("pod", 1)
+    data = mesh.shape.get("data", 1)
+    coords = (np.arange(pods * data) // data)[:, None]
+    return Topology(coords, [DCN, ICI])
+
+
+def dp_decomposition(mesh) -> tuple:
+    """(slow_axis, fast_axes) of the data-parallel axes: the multilevel
+    gradient exchange reduce-scatters over ``fast_axes`` and crosses
+    ``slow_axis`` (the DCN) exactly once per step."""
+    slow = "pod" if "pod" in mesh.shape else None
+    fast = ("data",) if "data" in mesh.shape else ()
+    return slow, fast
+
+
+def mesh_communicator(mesh, *, backend: str = "jax", policy="paper", **kw):
+    """The :class:`repro.core.Communicator` for a device mesh.
+
+    backend "jax": axis-decomposed collectives over the dp axes.
+    backend "ppermute": explicit tree rounds over a single flattened axis
+        (pass ``axis=``, or use a 1-axis mesh).
+    backend "sim": postal-model planning/estimation on the mesh's topology.
+    """
+    from repro.core import Communicator
+
+    topo = mesh_topology(mesh)
+    if backend == "jax":
+        # rank space = (pod, data) only: use the dp-scoped topology so
+        # member/root indices agree with the backend's axis_index space
+        topo = dp_topology(mesh)
+        slow, fast = dp_decomposition(mesh)
+        kw.setdefault("slow_axis", slow)
+        kw.setdefault("fast_axes", fast)
+    elif backend == "ppermute" and "axis" not in kw:
+        if len(mesh.axis_names) != 1:
+            raise ValueError("ppermute backend needs axis= on multi-axis "
+                             "meshes")
+        kw["axis"] = mesh.axis_names[0]
+    return Communicator(topo, backend=backend, policy=policy, **kw)

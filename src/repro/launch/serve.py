@@ -12,6 +12,8 @@ import time
 
 import numpy as np
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 
 from repro.configs import get_config
@@ -31,6 +33,20 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
     from repro.models.sharding import param_shardings
     params = jax.device_put(params, param_shardings(params, mesh))
 
+    # Weight-distribution plan through the single collectives entry point:
+    # the multilevel tree broadcast of updated params crosses each slow link
+    # exactly once (paper §3.2); on a one-host demo we surface the plan and
+    # its postal-model estimate rather than shipping real bytes.
+    from repro.launch.mesh import mesh_communicator
+    wcomm = mesh_communicator(mesh, backend="sim", policy="paper")
+    wbytes = float(sum(np.prod(l.shape) * l.dtype.itemsize
+                       for l in jax.tree.leaves(params)))
+    print(f"[serve] {wcomm.describe()}; weight bcast "
+          f"({wbytes/1e6:.1f} MB): est "
+          f"{wcomm.bcast(wbytes, root=0).time*1e3:.2f} ms, "
+          f"{wcomm.slow_crossings('bcast', nbytes=wbytes)} slow-link "
+          f"crossing(s)")
+
     prefill = STEP.make_prefill_step(cfg, mesh, s_max)
     decode = STEP.make_decode_step(cfg, mesh)
 
@@ -42,7 +58,7 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
     if cfg.enc_dec:
         inputs["src_embeds"] = jnp.zeros((n_requests, prompt_len, cfg.d_model),
                                          jnp.bfloat16)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits, cache, pos = prefill(params, inputs)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out_tokens = [np.asarray(tok)]

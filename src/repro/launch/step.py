@@ -17,8 +17,10 @@ from typing import Any
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models import transformer as T
 from repro.models import sharding as SH
@@ -52,7 +54,8 @@ def model_dims_of(params: Any, model_size: int) -> Any:
 # Train
 # ---------------------------------------------------------------------- #
 
-def make_train_fn(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh):
+def make_train_fn(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
+                  comm=None):
     """The raw (un-jitted) shard_map'd train step.
 
     Structure: OUTER shard_map manual over the dp axes (pod, data) with the
@@ -60,9 +63,17 @@ def make_train_fn(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh):
     fwd/bwd); an INNER shard_map makes `model` manual too for the gradient
     sync + optimizer, because a manual-axis collective on an auto-sharded
     operand makes the partitioner all-gather the auto axis first (measured:
-    +52 GB/chip ICI on qwen3 train before this nesting)."""
+    +52 GB/chip ICI on qwen3 train before this nesting).
+
+    ``comm``: the mesh's :class:`repro.core.Communicator` (jax backend); the
+    gradient sync decomposes over its (slow_axis, fast_axes).  Built from the
+    mesh when omitted."""
+    from repro.launch.mesh import mesh_communicator
+
+    if comm is None:
+        comm = mesh_communicator(mesh, backend="jax")
     dp = SH.dp_axes(mesh)                       # ("pod","data") or ("data",)
-    slow = "pod" if "pod" in mesh.shape else None
+    slow = comm.slow_axis
     data_size = mesh.shape["data"]
     model_size = mesh.shape.get("model", 1)
     dp_degree = int(np.prod([mesh.shape[a] for a in dp]))
@@ -117,7 +128,7 @@ def train_in_shardings(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh):
     param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                             is_leaf=lambda x: isinstance(x, P))
 
-    if opt_cfg.zero1:
+    if opt_cfg.sharded_state:
         axes = adamw.scatter_axes(aparams, mesh.shape["data"], mdims)
 
         def combined(spec, ax, leaf):

@@ -24,7 +24,8 @@ from repro.configs import get_config
 from repro.configs.shapes import ShapeSpec
 from repro.data.pipeline import DataPipeline
 from repro.launch import step as STEP
-from repro.launch.mesh import make_test_mesh, make_production_mesh
+from repro.launch.mesh import (make_test_mesh, make_production_mesh,
+                               mesh_communicator)
 from repro.models import transformer as T
 from repro.optim.adamw import OptConfig, init_opt_state
 from repro.runtime.fault_tolerance import (FailureInjector, StragglerMonitor,
@@ -57,7 +58,23 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
     recoveries = 0
 
     def setup(mesh):
-        fn = jax.jit(STEP.make_train_fn(cfg, opt_cfg, mesh),
+        # the single topology-aware entry point: gradient sync decomposes
+        # over the communicator's (slow, fast) mesh axes
+        mcomm = mesh_communicator(mesh, backend="jax")
+        # estimate over the dp ranks only, with each model slice's share of
+        # the gradient (the sync moves 1/model_size of the bytes per slice)
+        from repro.core import Communicator
+        from repro.launch.mesh import dp_topology
+        sim = Communicator(dp_topology(mesh), policy="paper", backend="sim")
+        grad_bytes = 4 * sum(
+            int(np.prod(l.shape)) for l in
+            jax.tree.leaves(STEP.abstract_params(cfg)))
+        slice_bytes = grad_bytes / mesh.shape.get("model", 1)
+        print(f"[train] {mcomm.describe()}; grad sync mode '{comm}': "
+              f"est {sim.allreduce(slice_bytes).time*1e3:.1f} ms/step, "
+              f"{sim.slow_crossings('allreduce', nbytes=slice_bytes)} "
+              f"slow-link crossing(s)")
+        fn = jax.jit(STEP.make_train_fn(cfg, opt_cfg, mesh, comm=mcomm),
                      donate_argnums=(0, 1))
         p_sh, o_sh, b_sh = STEP.train_in_shardings(cfg, opt_cfg, mesh)
         return fn, p_sh, o_sh, b_sh

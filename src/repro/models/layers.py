@@ -365,7 +365,8 @@ def _cache_attend_sp(q, k_new, v_new, cache_k, cache_v, pos, windowed,
 def _sp_decode_ctx(s_cache: int, batch: int):
     """(use_sp, auto_dp) when a model axis exists and divides the cache."""
     import jax.sharding as jsh
-    am = jsh.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    am = get_abstract_mesh()
     if am is None or "model" not in (am.axis_names or ()):
         return False, ()
     msize = am.shape["model"]
@@ -388,8 +389,8 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
 
     With a model axis present, the cache attention runs as an explicit
     flash-decode shard_map (sequence-sharded cache + LSE combine)."""
-    from jax import shard_map
     import jax.sharding as jsh
+    from repro.compat import shard_map
 
     B = x.shape[0]
     hd = cfg.head_dim
@@ -612,7 +613,7 @@ def moe_fwd(p, cfg: ModelConfig, x, chunk: int = MOE_CHUNK) -> jax.Array:
     Long sequences are scanned in token blocks with remat: dispatch buffers
     live only per block (8x working-set cut at olmoe prefill_32k)."""
     import jax.sharding as jsh
-    from jax import shard_map
+    from repro.compat import shard_map
 
     m = cfg.moe
     B, S, D = x.shape
@@ -620,7 +621,8 @@ def moe_fwd(p, cfg: ModelConfig, x, chunk: int = MOE_CHUNK) -> jax.Array:
     xt = x.reshape(T, D)
 
     block = None
-    am = jsh.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    am = get_abstract_mesh()
     if am is not None and "model" in (am.axis_names or ()):
         msize = am.shape["model"]
         if msize > 1 and m.n_experts % msize == 0:

@@ -43,6 +43,14 @@ class OptConfig:
     # gradient communication: flat | multilevel | multilevel_compress
     comm_mode: str = "multilevel"
 
+    @property
+    def sharded_state(self) -> bool:
+        """True when the opt state lives as 1/|data| shards.  The flat
+        (topology-unaware) baseline always runs the dense path in
+        ``apply_updates``, so its state must be replicated too — sharding
+        decisions and update math must agree on this one predicate."""
+        return self.zero1 and self.comm_mode != "flat"
+
 
 def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
     warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
@@ -107,7 +115,7 @@ def opt_manual_specs(params: Any, cfg: OptConfig, data_size: int,
     specs for dp axes).  ZeRO-1: P('data' at scatter axis); dense: P()."""
     from jax.sharding import PartitionSpec as P
 
-    if not cfg.zero1:
+    if not cfg.sharded_state:
         spec = jax.tree.map(lambda _: P(), params)
     else:
         axes = scatter_axes(params, data_size, model_dims)
@@ -165,7 +173,7 @@ def apply_updates(
     axes = scatter_axes(params, data_size, model_dims)
     norm_axes = ("data",) + ((model_axis,) if model_axis else ())
 
-    if cfg.comm_mode == "flat" or not cfg.zero1:
+    if not cfg.sharded_state:
         # Baseline (topology-unaware) or dense mode: full grads everywhere.
         dp = tuple(a for a in (slow_axis, "data") if a)
         if cfg.comm_mode == "flat":

@@ -1,0 +1,165 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface the
+test-suite uses, installed by conftest.py ONLY when the real package is
+missing (see requirements-dev.txt for the real thing).
+
+It is not a property-based testing engine: strategies draw from a
+deterministically seeded PRNG and ``@given`` simply runs the test body for
+``max_examples`` drawn tuples.  No shrinking, no database, no health checks —
+just enough to keep tier-1 collection and the property tests' example sweeps
+alive on machines without hypothesis installed.
+
+Supported surface:
+  given, settings(deadline=..., max_examples=...),
+  strategies.{integers, floats, booleans, sampled_from, lists, tuples,
+              composite, data}
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A strategy is just a callable drawing one example from an RNG."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"<stub-strategy {self._label}>"
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    f"integers({min_value},{max_value})")
+
+
+def floats(min_value, max_value, **_kw):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                    f"floats({min_value},{max_value})")
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))], "sampled_from")
+
+
+def lists(elements: Strategy, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example_from(rng) for _ in range(n)]
+
+    return Strategy(draw, "lists")
+
+
+def tuples(*element_strategies):
+    return Strategy(
+        lambda rng: tuple(s.example_from(rng) for s in element_strategies),
+        "tuples")
+
+
+def composite(fn):
+    """@st.composite: fn(draw, *args) -> value; returns a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_one(rng):
+            def draw(strategy):
+                return strategy.example_from(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return Strategy(draw_one, f"composite({fn.__name__})")
+
+    return factory
+
+
+class _DataObject:
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.example_from(self._rng)
+
+
+def data():
+    return Strategy(lambda rng: _DataObject(rng), "data")
+
+
+def settings(**kwargs):
+    def deco(fn):
+        merged = dict(getattr(fn, "_stub_settings", {}))
+        merged.update(kwargs)
+        fn._stub_settings = merged
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            cfg = getattr(wrapper, "_stub_settings", {})
+            n = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                args = tuple(s.example_from(rng) for s in strategies)
+                try:
+                    fn(*args)
+                except Exception as e:
+                    shown = tuple(a for a in args
+                                  if not isinstance(a, _DataObject))
+                    raise AssertionError(
+                        f"stub-hypothesis falsifying example "
+                        f"(iteration {i}): {fn.__name__}{shown!r}") from e
+
+        # Let a later @settings(...) applied above @given reach the wrapper.
+        wrapper._stub_settings = dict(getattr(fn, "_stub_settings", {}))
+        # pytest must see the zero-arg signature, not the wrapped one —
+        # otherwise it treats the strategy parameters as missing fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise AssertionError("stub-hypothesis: assume() not satisfied "
+                             "(unsupported in stub)")
+
+
+def install() -> None:
+    """Register stub `hypothesis` and `hypothesis.strategies` modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.__version__ = "0.0-stub"
+    hyp.__is_stub__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples", "composite", "data"):
+        setattr(st, name, globals()[name])
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

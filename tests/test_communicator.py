@@ -1,0 +1,283 @@
+"""Tests for the unified Communicator API: op dispatch, plan caching,
+tree_rounds properties, sim equivalence, and cross-backend agreement."""
+import pytest
+
+from repro.core import Communicator, OPS, SimResult, Tree, size_bucket
+from repro.core import schedule as S
+from repro.core.simulator import simulate
+from repro.core.topology import Topology, WAN, LAN, SMP, paper_fig8_topology
+from repro.core.trees import (binomial_tree, build_multilevel_tree,
+                              chain_tree, flat_tree, postal_tree,
+                              PAPER_POLICY)
+from repro.core.tree_exec import tree_rounds
+
+
+@pytest.fixture(scope="module")
+def fig8():
+    return paper_fig8_topology()
+
+
+# ------------------------------------------------------------------ #
+# tree_rounds properties across every builder (satellite coverage).
+# ------------------------------------------------------------------ #
+
+def _round_trees(n=23):
+    topo = paper_fig8_topology()
+    members = list(range(n))
+    return {
+        "flat": flat_tree(0, members),
+        "binomial": binomial_tree(3, members),
+        "chain": chain_tree(0, members),
+        "postal2": postal_tree(0, members, lam=2),
+        "postal5": postal_tree(5, members, lam=5),
+        "multilevel": build_multilevel_tree(topo, 7),
+    }
+
+
+@pytest.mark.parametrize("kind", list(_round_trees()))
+def test_tree_rounds_properties(kind):
+    """Rounds have disjoint (src,dst) pairs, every non-root rank receives
+    exactly once, and parents never inject before they have received."""
+    tree = _round_trees()[kind]
+    rounds = tree_rounds(tree)
+    recv_round = {tree.root: -1}
+    for r, edges in enumerate(rounds):
+        assert edges, f"empty round {r}"
+        srcs = [s for s, _ in edges]
+        dsts = [d for _, d in edges]
+        # disjointness: one injection per sender, one receive per dst
+        assert len(srcs) == len(set(srcs)), (kind, r, "double injection")
+        assert len(dsts) == len(set(dsts)), (kind, r, "double receive")
+        assert not set(srcs) & set(dsts), (kind, r, "rank sends and receives")
+        for s, d in edges:
+            assert s in recv_round and recv_round[s] < r, \
+                (kind, r, "parent injects before receiving")
+            assert d not in recv_round, (kind, r, "duplicate receive")
+            recv_round[d] = r
+    assert set(recv_round) == set(tree.members())
+    # edge set is exactly the tree's edges
+    flat = {e for edges in rounds for e in edges}
+    assert flat == {(p, c) for p, cs in tree.children.items() for c in cs}
+
+
+def test_tree_rounds_deep_chain():
+    """The iterative schedule/simulator paths survive very deep trees."""
+    n = 3000
+    t = chain_tree(0, range(n))
+    assert t.depth() == n - 1
+    assert len(t.subtree_sizes()) == n
+    topo = Topology([[0]] * n, [WAN, SMP])
+    done = simulate(S.reduce(t, 1e3), topo)  # recursive version overflowed
+    assert len(done) == n
+
+
+def test_validate_raises_value_error():
+    """Tree.validate must raise real exceptions, not bare asserts — and must
+    terminate (with an error) on cyclic children maps."""
+    with pytest.raises(ValueError, match="invalid tree"):
+        Tree(0, {0: [1], 1: [0]}).validate()  # cycle
+    with pytest.raises(ValueError, match="invalid tree"):
+        Tree(0, {0: [1, 1]}).validate()       # duplicate child
+    with pytest.raises(ValueError, match="root .* has a parent"):
+        Tree(0, {0: [1], 2: [0, 1]}).validate()
+    good = binomial_tree(0, range(8))
+    good.validate()  # no raise
+
+
+# ------------------------------------------------------------------ #
+# Sim backend: equivalence with direct schedule + simulate calls.
+# ------------------------------------------------------------------ #
+
+def test_sim_backend_matches_direct_calls(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    tree = build_multilevel_tree(fig8, 5, policy=PAPER_POLICY)
+    for op, nb in [("bcast", 64e3), ("reduce", 1e3), ("gather", 16e3),
+                   ("scatter", 16e3), ("allreduce", 64e3),
+                   ("allgather", 4e3)]:
+        spec = OPS[op]
+        res = (getattr(comm, op)(nb, root=5) if spec.rootful
+               else comm._run(op, nb, 5))
+        direct = simulate(getattr(S, op)(tree, nb), fig8)
+        assert isinstance(res, SimResult)
+        assert res.completion == direct, op
+    assert comm._run("barrier", None, 5).completion == \
+        simulate(S.barrier(tree), fig8)
+
+
+def test_all_seven_ops_dispatch(fig8):
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    assert set(OPS) == {"bcast", "reduce", "barrier", "gather", "scatter",
+                        "allreduce", "allgather"}
+    times = {}
+    for op in OPS:
+        if op == "barrier":
+            times[op] = comm.barrier().time
+        elif OPS[op].rootful:
+            times[op] = getattr(comm, op)(8e3, root=0).time
+        else:
+            times[op] = getattr(comm, op)(8e3).time
+    assert all(t > 0 for t in times.values()), times
+
+
+def test_unknown_op_and_backend_rejected(fig8):
+    with pytest.raises(KeyError):
+        Communicator(fig8).plan("alltoall")
+    with pytest.raises(ValueError, match="unknown backend"):
+        Communicator(fig8, backend="mpi")
+    with pytest.raises(ValueError, match="not a member"):
+        Communicator(fig8, members=[0, 1, 2]).bcast(1e3, root=40)
+
+
+# ------------------------------------------------------------------ #
+# Plan cache: repeat calls must re-run nothing.
+# ------------------------------------------------------------------ #
+
+def test_plan_cache_hit_builds_nothing(fig8):
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    comm.bcast(64e3, root=0)
+    info1 = comm.cache_info()
+    assert info1.misses == 1 and info1.tree_builds == 3  # auto: 3 candidates
+    r2 = comm.bcast(64e3, root=0)
+    info2 = comm.cache_info()
+    assert info2.hits == info1.hits + 1
+    assert info2.tree_builds == info1.tree_builds, "second call rebuilt trees"
+    assert r2.time > 0
+    # same size-bucket, different exact size: still a plan hit
+    comm.bcast(65e3, root=0)
+    assert comm.cache_info().tree_builds == info1.tree_builds
+    # different root or op: new plan
+    comm.bcast(64e3, root=1)
+    comm.reduce(64e3, root=0)
+    assert comm.cache_info().tree_builds > info1.tree_builds
+
+
+def test_plan_identity_and_rounds_cached(fig8):
+    # size-independent policy: ONE plan per (op, root), any message size —
+    # so plan() inspection and a later execution share the cache entry
+    comm = Communicator(fig8, policy="paper")
+    p1 = comm.plan("bcast", root=0, nbytes=17e3)
+    p2 = comm.plan("bcast", root=0, nbytes=900e3)
+    assert p1 is p2
+    # size-dependent policy: one plan per size octave
+    ad = Communicator(fig8, policy="adaptive")
+    assert ad.plan("bcast", root=0, nbytes=17e3) is \
+        ad.plan("bcast", root=0, nbytes=20e3)
+    assert ad.plan("bcast", root=0, nbytes=17e3) is not \
+        ad.plan("bcast", root=0, nbytes=900e3)
+    r1 = p1.rounds
+    assert p1.rounds is r1  # memoised
+    assert p1.schedule(32e3) is p1.schedule(32e3)
+
+
+def test_size_bucket():
+    assert size_bucket(0) == -1 and size_bucket(None) == -1
+    assert size_bucket(1) == 0
+    assert size_bucket(1024) == size_bucket(2000) == 10
+    assert size_bucket(2048) == 11
+
+
+def test_members_subset(fig8):
+    members = [0, 1, 2, 16, 17, 32, 33]
+    comm = Communicator(fig8, policy="paper", members=members)
+    tree = comm.plan("bcast", root=16, nbytes=1e3).tree
+    assert sorted(tree.members()) == sorted(members)
+    assert tree.root == 16
+
+
+def test_deprecated_best_tree_shim(fig8):
+    from repro.core.trees import best_tree
+    with pytest.warns(DeprecationWarning):
+        t = best_tree(fig8, 0, "bcast", 64e3)
+    t.validate()
+    assert sorted(t.members()) == list(range(fig8.nprocs))
+
+
+# ------------------------------------------------------------------ #
+# Cross-backend agreement on a small device mesh (8 emulated devices).
+# ------------------------------------------------------------------ #
+
+def test_backend_agreement_on_mesh(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import Communicator
+from repro.core.topology import tpu_v5e_multipod
+
+topo = tpu_v5e_multipod(pods=2, boards=2, chips_per_board=2)
+ROOT = 3
+x_host = np.arange(8.0, dtype=np.float32)
+
+# --- ppermute backend: explicit tree rounds over the flat axis ---------
+mesh1 = jax.make_mesh((8,), ("all",))
+pp = Communicator(topo, policy="paper", backend="ppermute", axis="all")
+def run_pp(fn):
+    return np.asarray(jax.jit(shard_map(
+        fn, mesh=mesh1, in_specs=P("all"), out_specs=P("all")))(
+            jnp.asarray(x_host)))
+
+# --- jax backend: axis-decomposed shortcuts over (pod, fast) -----------
+mesh2 = jax.make_mesh((2, 4), ("pod", "fast"))
+jx = Communicator(topo, backend="jax", slow_axis="pod", fast_axes=("fast",))
+def run_jx(fn):
+    return np.asarray(jax.jit(shard_map(
+        fn, mesh=mesh2, in_specs=P(("pod", "fast")),
+        out_specs=P(("pod", "fast"))))(jnp.asarray(x_host)))
+
+# --- sim backend: postal-model plan for the same topology --------------
+sim = Communicator(topo, policy="paper", backend="sim")
+
+# bcast
+want = np.full(8, float(ROOT), np.float32)
+np.testing.assert_allclose(run_pp(lambda v: pp.bcast(v, root=ROOT)), want)
+np.testing.assert_allclose(run_jx(lambda v: jx.bcast(v, root=ROOT)), want)
+# reduce (non-root ranks: zeros)
+want = np.zeros(8, np.float32); want[ROOT] = x_host.sum()
+np.testing.assert_allclose(run_pp(lambda v: pp.reduce(v, root=ROOT)), want)
+np.testing.assert_allclose(run_jx(lambda v: jx.reduce(v, root=ROOT)), want)
+# allreduce
+want = np.full(8, x_host.sum(), np.float32)
+np.testing.assert_allclose(run_pp(lambda v: pp.allreduce(v)), want)
+np.testing.assert_allclose(run_jx(lambda v: jx.allreduce(v)), want)
+# barrier returns a sync token; both must run without error
+run_pp(lambda v: v + pp.barrier())
+run_jx(lambda v: v + jx.barrier())
+
+# gather/allgather/scatter: each rank's local output is a [P(,1)] buffer;
+# shard_map concatenates them rank-major, so reshape to (rank, P).
+pg = np.asarray(jax.jit(shard_map(lambda v: pp.gather(v, root=ROOT),
+    mesh=mesh1, in_specs=P("all"), out_specs=P("all", None)))(
+        jnp.asarray(x_host))).reshape(8, 8)
+jg = np.asarray(jax.jit(shard_map(lambda v: jx.gather(v, root=ROOT),
+    mesh=mesh2, in_specs=P(("pod", "fast")),
+    out_specs=P(("pod", "fast"), None)))(jnp.asarray(x_host))).reshape(8, 8)
+np.testing.assert_allclose(pg, jg)
+np.testing.assert_allclose(pg[ROOT], x_host)   # root holds everything
+np.testing.assert_allclose(pg[(ROOT + 1) % 8], np.zeros(8))  # non-root: 0
+pa = np.asarray(jax.jit(shard_map(lambda v: pp.allgather(v),
+    mesh=mesh1, in_specs=P("all"), out_specs=P("all", None)))(
+        jnp.asarray(x_host))).reshape(8, 8)
+ja = np.asarray(jax.jit(shard_map(lambda v: jx.allgather(v),
+    mesh=mesh2, in_specs=P(("pod", "fast")),
+    out_specs=P(("pod", "fast"), None)))(jnp.asarray(x_host))).reshape(8, 8)
+np.testing.assert_allclose(pa, ja)
+for row in pa:
+    np.testing.assert_allclose(row, x_host)
+# scatter: root's [P, P] buffer; rank r keeps row r, so the rank-major
+# concatenation of local outputs reassembles the buffer itself.
+buf = np.arange(64.0, dtype=np.float32).reshape(8, 8)
+ps = np.asarray(jax.jit(shard_map(lambda v: pp.scatter(v, root=ROOT),
+    mesh=mesh1, in_specs=P(None, None), out_specs=P("all")))(
+        jnp.asarray(buf))).reshape(8, 8)
+js = np.asarray(jax.jit(shard_map(lambda v: jx.scatter(v, root=ROOT),
+    mesh=mesh2, in_specs=P(None, None),
+    out_specs=P(("pod", "fast"))))(jnp.asarray(buf))).reshape(8, 8)
+np.testing.assert_allclose(ps, buf)
+np.testing.assert_allclose(js, buf)
+
+# the sim backend plans the identical tree the ppermute backend executed
+assert sim.plan("bcast", root=ROOT, nbytes=4.0).tree.children == \
+    pp.plan("bcast", root=ROOT, nbytes=4.0).tree.children
+assert sim.bcast(1e3, root=ROOT).time > 0
+print("OK")
+""")

@@ -2,7 +2,15 @@
 expert-parallel MoE (nested shard_map) and flash-decode (sequence-sharded
 KV cache with LSE combine).  Both must be numerically equivalent to the
 single-device reference paths."""
+import jax
 import pytest
+
+# These paths dispatch on the ambient abstract mesh (jax.set_mesh), which
+# older toolchains do not expose — the model code falls back to the
+# reference path there, making the comparison vacuous.
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason="abstract-mesh dispatch (jax.set_mesh) needs newer jax")
 
 
 def test_ep_moe_matches_reference(subproc):
