@@ -38,6 +38,9 @@ def variants(topo) -> dict[str, Communicator]:
                                     view=magpie_site_view(topo)),
         "multilevel": Communicator(topo, policy="paper"),
         "adaptive": Communicator(topo, policy="adaptive"),
+        # beyond-paper: segmented plans + large-message algorithms, argmin
+        # over {tree} x {algorithm} x {segment size}
+        "auto-segmented": Communicator(topo, policy="auto"),
     }
 
 

@@ -5,9 +5,16 @@ entirely through the public :class:`repro.core.Communicator` API.
 Also reports the observed trade-off table: where multilevel wins (latency /
 message-count bound) and where bandwidth concentration loses (large gather/
 scatter onto one slow link) — the honest version of the paper's Table.
+
+Run as a script, it PERSISTS ``BENCH_collectives.json`` at the repo root —
+the Fig. 8 replication plus a 1 KiB–256 MiB large-message sweep (unsegmented
+multilevel vs the segmented/algorithm-switching "auto" plans) — so the perf
+trajectory is tracked from PR 2 on.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 import numpy as np
@@ -21,6 +28,7 @@ VARIANTS = {
     "binomial-oblivious": "oblivious",
     "multilevel": "paper",
     "adaptive": "adaptive",
+    "segmented-auto": "auto",  # {tree} x {algorithm} x {segment} argmin
 }
 
 
@@ -90,7 +98,68 @@ def summarize(rows) -> list[str]:
     return out
 
 
+def large_message_sweep(sizes=None) -> list[dict]:
+    """1 KiB – 256 MiB bcast/allreduce on the paper's Fig. 8 topology:
+    unsegmented multilevel baseline vs the auto-selected segmented plan
+    (algorithm + segment size chosen by the simulator argmin)."""
+    topo = paper_fig8_topology()
+    paper = Communicator(topo, policy="paper")
+    auto = Communicator(topo, policy="auto")
+    sizes = sizes or [float(1 << k) for k in range(10, 29)]  # 1KiB..256MiB
+    rows = []
+    for op in ("bcast", "allreduce"):
+        for nb in sizes:
+            base = (paper.bcast(nb, root=0) if op == "bcast"
+                    else paper.allreduce(nb)).time
+            fast = (auto.bcast(nb, root=0) if op == "bcast"
+                    else auto.allreduce(nb)).time
+            plan = auto.plan(op, root=0 if op == "bcast" else None,
+                             nbytes=nb)
+            rows.append({
+                "op": op, "size_bytes": nb,
+                "multilevel_unsegmented_s": base, "auto_s": fast,
+                "speedup": base / fast if fast else None,
+                "algorithm": plan.algorithm,
+                "segment": plan.segment,
+            })
+    return rows
+
+
+def persist(path: str | None = None, rows: list[dict] | None = None) -> dict:
+    """Run everything and write ``BENCH_collectives.json``; pass ``rows``
+    from an earlier :func:`run` to avoid re-simulating the table."""
+    from bench_bcast_fig8 import run as fig8_run
+
+    if rows is None:
+        rows = run(out=open(os.devnull, "w"))
+    sweep = large_message_sweep()
+    fig8 = {name: [[int(nb), t] for nb, t in series]
+            for name, series in fig8_run(out=open(os.devnull, "w")).items()}
+    doc = {
+        "generated_by": "benchmarks/bench_collectives.py",
+        "fig8_bcast_sum_over_roots": fig8,
+        "collectives": rows,
+        "large_message_sweep": sweep,
+        "summary": summarize(rows),
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_collectives.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return doc
+
+
 if __name__ == "__main__":
     rows = run()
     for line in summarize(rows):
         print("#", line)
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    doc = persist(rows=rows)
+    big = [r for r in doc["large_message_sweep"]
+           if r["size_bytes"] == float(64 << 20)]
+    for r in big:
+        print(f"# 64MiB {r['op']}: {r['multilevel_unsegmented_s']:.2f}s -> "
+              f"{r['auto_s']:.2f}s ({r['speedup']:.1f}x, {r['algorithm']})")
+    print("# wrote BENCH_collectives.json")

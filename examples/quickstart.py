@@ -50,3 +50,17 @@ ml.bcast(256e3, root=0)
 after = ml.cache_info()
 print(f"plan cache: +{after.hits - before.hits} hit, "
       f"tree builds unchanged: {after.tree_builds == before.tree_builds}")
+
+# 7. Large messages: plans LOWER to a segmented rounds IR, and the "auto"
+#    argmin also searches bandwidth-optimal algorithms (scatter-allgather
+#    bcast, reduce-scatter+allgather allreduce) — pipelined chunks cross
+#    the WAN on parallel pair links instead of one saturated edge.
+auto = Communicator(topo, policy="auto")
+N = 64 * 2**20  # 64 MiB
+plan = auto.plan("bcast", root=0, nbytes=N)
+low = plan.lower(N)
+print(f"64 MiB bcast plan: algorithm={plan.algorithm}, "
+      f"{low.nchunks} chunks x {low.nsegs} segments, "
+      f"{len(low.sends)} sends")
+print(f"  unsegmented multilevel: {ml.bcast(N, root=0).time:8.2f} s")
+print(f"  segmented auto plan:    {auto.bcast(N, root=0).time:8.2f} s")

@@ -16,8 +16,9 @@ The heavier device modules (:mod:`repro.core.collectives`,
 simulator-only use.
 """
 from .communicator import (BACKENDS, CacheInfo, Communicator, OPS, OpSpec,
-                           Plan, SimResult, register_op, select_tree,
-                           size_bucket)
+                           Plan, PlanChoice, SimResult, register_op,
+                           select_plan, select_tree, size_bucket)
+from .rounds import Lowered, SegSend
 from .topology import (Level, Topology, flat_view, magpie_machine_view,
                        magpie_site_view, paper_fig8_topology,
                        tpu_v5e_multipod)
@@ -27,9 +28,12 @@ from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
 
 __all__ = [
     # the front door
-    "Communicator", "Plan", "SimResult", "CacheInfo",
+    "Communicator", "Plan", "PlanChoice", "SimResult", "CacheInfo",
+    # the rounds IR (select -> lower -> execute)
+    "Lowered", "SegSend",
     # op dispatch
-    "OPS", "OpSpec", "register_op", "select_tree", "size_bucket", "BACKENDS",
+    "OPS", "OpSpec", "register_op", "select_plan", "select_tree",
+    "size_bucket", "BACKENDS",
     # topology
     "Topology", "Level", "paper_fig8_topology", "tpu_v5e_multipod",
     "magpie_machine_view", "magpie_site_view", "flat_view",

@@ -41,8 +41,9 @@ import dataclasses
 import math
 from typing import Any, Callable, Sequence
 
+from . import rounds as R
 from . import schedule as S
-from .simulator import simulate
+from .simulator import simulate, simulate_rounds
 from .topology import Topology
 from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
                     binomial_tree, build_multilevel_tree)
@@ -53,6 +54,8 @@ __all__ = [
     "register_op",
     "size_bucket",
     "select_tree",
+    "select_plan",
+    "PlanChoice",
     "Plan",
     "PlanCache",
     "CacheInfo",
@@ -70,8 +73,11 @@ __all__ = [
 class OpSpec:
     """One collective: how to schedule it over a tree and its data flow.
 
-    ``schedule(tree, nbytes) -> Schedule`` is the simulator-plane form;
-    backends with device execution provide their own methods keyed by name.
+    ``schedule(tree, nbytes) -> Schedule`` is the whole-message simulator
+    form; ``algorithms`` names the registered lowerings to the rounds IR
+    (:mod:`repro.core.rounds`) — ``"tree"`` is the generic segmented tree
+    lowering, large-message algorithms (``"sag"``, ``"rsag"``) register
+    alongside it and the ``"auto"`` policy searches across them.
     ``rootful`` ops have a distinguished root (bcast/reduce/gather/scatter);
     ``sized`` ops take a byte count (barrier does not).
     """
@@ -80,26 +86,30 @@ class OpSpec:
     schedule: Callable[[Tree, float], S.Schedule]
     rootful: bool
     sized: bool = True
+    algorithms: tuple[str, ...] = ("tree",)
 
 
 OPS: dict[str, OpSpec] = {}
 
 
 def register_op(name: str, schedule: Callable, *, rootful: bool,
-                sized: bool = True) -> OpSpec:
+                sized: bool = True,
+                algorithms: Sequence[str] = ("tree",)) -> OpSpec:
     """Register a collective in the dispatch table (idempotent overwrite)."""
-    spec = OpSpec(name, schedule, rootful=rootful, sized=sized)
+    spec = OpSpec(name, schedule, rootful=rootful, sized=sized,
+                  algorithms=tuple(algorithms))
     OPS[name] = spec
     return spec
 
 
-register_op("bcast", S.bcast, rootful=True)
+register_op("bcast", S.bcast, rootful=True, algorithms=("tree", "sag"))
 register_op("reduce", S.reduce, rootful=True)
 register_op("barrier", lambda tree, nbytes=0.0: S.barrier(tree),
             rootful=False, sized=False)
 register_op("gather", S.gather, rootful=True)
 register_op("scatter", S.scatter, rootful=True)
-register_op("allreduce", S.allreduce, rootful=False)
+register_op("allreduce", S.allreduce, rootful=False,
+            algorithms=("tree", "rsag"))
 register_op("allgather", S.allgather, rootful=False)
 
 
@@ -152,12 +162,7 @@ def select_tree(topo: Topology, root: int, op: str, nbytes: float,
     if policy == "oblivious":
         return binomial_tree(root, members), 1
     if policy in ("auto", "best"):
-        candidates = [
-            build_multilevel_tree(build_topo, root, members, PAPER_POLICY),
-            build_multilevel_tree(build_topo, root, members,
-                                  adaptive_policy(build_topo, nbytes or 0.0)),
-            binomial_tree(root, members),
-        ]
+        candidates = _candidate_trees(build_topo, root, members, nbytes)
         nb = nbytes or 0.0
         times = [max(simulate(spec.schedule(t, nb), topo).values())
                  for t in candidates]
@@ -165,23 +170,160 @@ def select_tree(topo: Topology, root: int, op: str, nbytes: float,
     raise ValueError(f"unknown policy {policy!r}")
 
 
+def _candidate_trees(build_topo: Topology, root: int, members: list,
+                     nbytes: float) -> list[Tree]:
+    """The ONE candidate-tree list every "auto" argmin searches."""
+    return [
+        build_multilevel_tree(build_topo, root, members, PAPER_POLICY),
+        build_multilevel_tree(build_topo, root, members,
+                              adaptive_policy(build_topo, nbytes or 0.0)),
+        binomial_tree(root, members),
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """Outcome of plan selection: the tree, the rounds-IR algorithm, the
+    segment policy (None | "bdp" | bytes) and how many trees were built."""
+
+    tree: Tree
+    algorithm: str
+    segment: Any
+    n_built: int
+
+
+# Only these ops gain from sub-message segmentation (uniform payload down /
+# up the tree); personalised ops pipeline at chunk granularity instead.
+_SEGMENTABLE = ("bcast", "reduce", "allreduce")
+
+
+def select_plan(topo: Topology, root: int, op: str, nbytes: float,
+                members: Sequence[int] | None = None,
+                policy: Any = "auto",
+                view: Topology | None = None,
+                algorithm: str | None = None,
+                segment_bytes: Any = None) -> PlanChoice:
+    """Pick (tree, algorithm, segment size) for one collective.
+
+    Under a fixed tree policy the defaults stay faithful to that baseline:
+    algorithm "tree", no segmentation.  Under ``policy="auto"`` (or an
+    explicit ``algorithm="auto"``) the argmin searches the full product
+    {tree shape} x {registered algorithm} x {segment size} by lowering each
+    candidate to the rounds IR and simulating it on the true topology —
+    every process reaches the identical choice with zero communication.
+    """
+    spec = OPS[op]
+    build_topo = view if view is not None else topo
+    if members is None:
+        members = list(range(build_topo.nprocs))
+    members = list(members)
+
+    searching = policy in ("auto", "best")
+    if searching:
+        trees = _candidate_trees(build_topo, root, members, nbytes)
+        n_built = len(trees)
+    else:
+        tree, n_built = select_tree(topo, root, op, nbytes,
+                                    members=members, policy=policy,
+                                    view=view)
+        trees = [tree]
+
+    # algorithm candidates: fixed policies default to the faithful "tree"
+    # plan; searching policies (or algorithm="auto") consider everything
+    # registered for the op.  Baselines built against a *view* stay on
+    # "tree" — they model systems without the leaf-group machinery.
+    nb = float(nbytes or 0.0)
+    if algorithm not in (None, "auto"):
+        algos = [algorithm]
+    elif (algorithm == "auto" or searching) and view is None and nb > 0 \
+            and len(members) > 1:
+        algos = list(spec.algorithms)
+    else:
+        algos = ["tree"]
+
+    # segment candidates
+    if segment_bytes is None:
+        segs = ([None, "bdp"] if searching and op in _SEGMENTABLE and nb > 0
+                else [None])
+    elif segment_bytes == "off":
+        segs = [None]
+    else:
+        segs = [segment_bytes]
+
+    combos: list[tuple[Tree, str, Any]] = []
+    for seg in segs:
+        for algo in algos:
+            if algo == "tree":
+                combos.extend((t, "tree", seg) for t in trees)
+            else:
+                combos.append((trees[0], algo, seg))
+
+    if len(combos) == 1:
+        tree, algo, seg = combos[0]
+        if algo != "tree":  # forced algorithm: fail at plan time, curated
+            try:
+                R.lower(op, algo, tree, build_topo, nb, segment_bytes=seg,
+                        members=members, root=root)
+            except ValueError as e:
+                raise ValueError(
+                    f"no candidate of [{algo!r}] lowers op {op!r} on this "
+                    f"topology ({e}); drop algorithm= to let the policy "
+                    f"fall back to 'tree'") from e
+        return PlanChoice(tree, algo, seg, n_built)
+
+    best, best_t = None, math.inf
+    for tree, algo, seg in combos:
+        try:
+            low = R.lower(op, algo, tree, build_topo, nb,
+                          segment_bytes=seg, members=members, root=root)
+        except ValueError:  # e.g. rsag on non-uniform leaf groups
+            continue
+        t = max(simulate_rounds(low, topo).values())
+        if t < best_t:
+            best, best_t = (tree, algo, seg), t
+    if best is None:
+        # only reachable when a non-"tree" algorithm was explicitly forced
+        # and no candidate could lower it on this topology
+        raise ValueError(
+            f"no candidate of {sorted({a for _, a, _ in combos})} lowers "
+            f"op {op!r} on this topology (rsag, e.g., needs uniform "
+            f"leaf-group sizes); drop algorithm= to let the policy fall "
+            f"back to 'tree'")
+    return PlanChoice(best[0], best[1], best[2], n_built)
+
+
 # ---------------------------------------------------------------------- #
 # Plans and the plan cache.
 # ---------------------------------------------------------------------- #
 
 class Plan:
-    """A cached collective plan: the selected ``tree``, lazily-built message
-    ``schedule(nbytes)`` (memoised per exact size), and the static ppermute
-    ``rounds`` — everything that is pure function of (op, root, members,
-    size-bucket) and therefore reusable across calls."""
+    """A cached collective plan: the selected ``tree`` + ``algorithm`` +
+    ``segment`` policy, the lazily-built whole-message ``schedule(nbytes)``,
+    the lowered rounds IR ``lower(nbytes)`` (both memoised per exact size),
+    and the static ppermute ``rounds`` — everything that is pure function of
+    (op, root, members, size-bucket) and therefore reusable across calls.
 
-    __slots__ = ("spec", "root", "tree", "_schedules", "_rounds")
+    The pipeline is select → **lower** → execute: selection fixes the plan,
+    ``lower(nbytes)`` splits the payload into per-level segments and emits
+    the per-rank timed rounds every backend consumes."""
 
-    def __init__(self, spec: OpSpec, root: int, tree: Tree):
+    __slots__ = ("spec", "root", "tree", "algorithm", "segment", "_topo",
+                 "_members", "_schedules", "_lowered", "_rounds")
+
+    def __init__(self, spec: OpSpec, root: int, tree: Tree,
+                 topo: Topology | None = None,
+                 members: Sequence[int] | None = None,
+                 algorithm: str = "tree", segment: Any = None):
         self.spec = spec
         self.root = root
         self.tree = tree
+        self.algorithm = algorithm
+        self.segment = segment
+        self._topo = topo
+        self._members = tuple(members if members is not None
+                              else tree.members())
         self._schedules: dict[float, S.Schedule] = {}
+        self._lowered: dict[float, R.Lowered] = {}
         self._rounds: list[list[tuple[int, int]]] | None = None
 
     @property
@@ -198,6 +340,23 @@ class Plan:
                                     else self.spec.schedule(self.tree))
         return self._schedules[key]
 
+    def lower(self, nbytes: float = 0.0) -> R.Lowered:
+        """The rounds IR for this plan at one exact size: payload split into
+        segments (size from the cost model's bandwidth-delay product when
+        ``segment == "bdp"``) and emitted as per-rank pipelined rounds."""
+        if self._topo is None:
+            raise ValueError("plan was built without a topology; "
+                             "cannot lower")
+        key = float(nbytes or 0.0)
+        if key not in self._lowered:
+            if len(self._lowered) >= 16:  # bound the per-size memo
+                self._lowered.clear()
+            self._lowered[key] = R.lower(
+                self.op, self.algorithm, self.tree, self._topo, key,
+                segment_bytes=self.segment, members=self._members,
+                root=self.root)
+        return self._lowered[key]
+
     @property
     def rounds(self) -> list[list[tuple[int, int]]]:
         if self._rounds is None:
@@ -207,6 +366,7 @@ class Plan:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Plan(op={self.op!r}, root={self.root}, "
+                f"algorithm={self.algorithm!r}, "
                 f"|members|={len(self.tree.members())})")
 
 
@@ -263,7 +423,9 @@ class SimResult:
 
 
 class SimBackend:
-    """Postal-model simulation: operands are byte counts."""
+    """Postal-model simulation: operands are byte counts.  Executes the
+    plan's lowered rounds IR — segment events with per-send dependencies —
+    not the whole-message schedule."""
 
     name = "sim"
     needs_plan = True
@@ -273,7 +435,7 @@ class SimBackend:
 
     def run(self, op: str, plan: Plan, x, root: int) -> SimResult:
         nbytes = float(x) if OPS[op].sized else 0.0
-        completion = simulate(plan.schedule(nbytes), self.comm.topo)
+        completion = simulate_rounds(plan.lower(nbytes), self.comm.topo)
         return SimResult(op, root, nbytes, completion)
 
 
@@ -297,7 +459,9 @@ class PpermuteBackend:
     # -- ops ----------------------------------------------------------- #
     def bcast(self, plan, x, root):
         from . import tree_exec as TE
-        return TE.tree_bcast(x, plan.tree, self.axis)
+        lowered = plan.lower(self.comm._nbytes_of("bcast", x))
+        return TE.run_lowered(x, lowered, self.axis,
+                              len(self.comm.members))
 
     def reduce(self, plan, x, root):
         import jax.numpy as jnp
@@ -309,8 +473,9 @@ class PpermuteBackend:
 
     def allreduce(self, plan, x, root):
         from . import tree_exec as TE
-        r = TE.tree_reduce(x, plan.tree, self.axis)
-        return TE.tree_bcast(r, plan.tree, self.axis)
+        lowered = plan.lower(self.comm._nbytes_of("allreduce", x))
+        return TE.run_lowered(x, lowered, self.axis,
+                              len(self.comm.members))
 
     def gather(self, plan, x, root):
         import jax.numpy as jnp
@@ -348,9 +513,14 @@ class PpermuteBackend:
 
 class JaxBackend:
     """Axis-decomposed device collectives — the paths where XLA has a
-    shortcut.  Runs inside shard_map over ``(slow_axis, *fast_axes)``;
-    allreduce is the multilevel reduce-scatter/exchange/all-gather
-    decomposition, the rest lower to a single (masked) psum.
+    shortcut.  Runs inside shard_map over ``(slow_axis, *fast_axes)``; the
+    rest lower to a single (masked) psum.
+
+    Allreduce consumes the plan's algorithm choice: ``"rsag"`` lowers to
+    the reduce-scatter (``psum_scatter``) / exchange / ``all_gather``
+    decomposition where the mesh decomposition allows it; ``"tree"`` (the
+    small-message winner) lowers to XLA's fused single all-reduce — the
+    latency-optimal native path.
 
     Rank space: flat row-major index over (slow_axis, *fast_axes) ONLY —
     the communicator's topology/members must cover exactly those ranks
@@ -358,7 +528,7 @@ class JaxBackend:
     mesh that also has a model axis)."""
 
     name = "jax"
-    needs_plan = False
+    needs_plan = True
 
     def __init__(self, comm: "Communicator"):
         if not comm.fast_axes and comm.slow_axis is None:
@@ -371,6 +541,8 @@ class JaxBackend:
                      + self.fast_axes)
 
     def run(self, op: str, plan, x, root: int):
+        if op == "allreduce":
+            return self.allreduce(x, root, plan)
         return getattr(self, op)(x, root)
 
     # -- helpers -------------------------------------------------------- #
@@ -391,10 +563,13 @@ class JaxBackend:
         return n
 
     # -- ops ------------------------------------------------------------ #
-    def allreduce(self, x, root):
+    def allreduce(self, x, root, plan=None):
         import jax.numpy as jnp
         from jax import lax
         from .collectives import multilevel_psum
+        if (plan is not None and plan.algorithm == "tree") \
+                or not self.fast_axes:
+            return lax.psum(x, self.axes)  # fused: latency-optimal
         fast = 1
         for ax in self.fast_axes:
             fast *= int(lax.psum(1, ax))
@@ -472,6 +647,11 @@ class Communicator:
     members : participating ranks (default: all of ``topo``).
     view : optional topology the *trees* are built against (MagPIe/oblivious
         baselines) while simulation still charges true per-edge costs.
+    algorithm : None (policy decides: "tree" under fixed policies, searched
+        under "auto") | "tree" | "sag" | "rsag" | "auto" (force the search).
+    segment_bytes : None (policy decides: unsegmented under fixed policies,
+        searched under "auto") | "bdp" (bandwidth-delay product) | "off" |
+        explicit bytes.  Governs how ``Plan.lower`` splits payloads.
     axis : flattened mesh axis name (ppermute backend).
     slow_axis, fast_axes : mesh axis decomposition (jax backend).
     """
@@ -480,6 +660,8 @@ class Communicator:
                  backend: str = "sim",
                  members: Sequence[int] | None = None,
                  view: Topology | None = None,
+                 algorithm: str | None = None,
+                 segment_bytes: Any = None,
                  axis: str | None = None,
                  slow_axis: str | None = None,
                  fast_axes: Sequence[str] = (),
@@ -487,6 +669,8 @@ class Communicator:
         self.topo = topo
         self.policy = policy
         self.view = view
+        self.algorithm = algorithm
+        self.segment_bytes = segment_bytes
         self.members = tuple(members if members is not None
                              else range(topo.nprocs))
         if not self.members:
@@ -495,10 +679,12 @@ class Communicator:
         self.slow_axis = slow_axis
         self.fast_axes = tuple(fast_axes)
         self.tree_builds = 0
-        # only these policies choose a different tree per size octave; for
-        # the rest, one plan per (op, root) serves every message size, so
-        # plan() inspection and execution always share a cache entry
-        self._size_dependent = policy in ("adaptive", "auto", "best")
+        # only these policies (or a searched algorithm) choose a different
+        # plan per size octave; for the rest, one plan per (op, root) serves
+        # every message size, so plan() inspection and execution always
+        # share a cache entry
+        self._size_dependent = (policy in ("adaptive", "auto", "best")
+                                or algorithm == "auto")
         self._cache = PlanCache(cache_size)
         try:
             backend_cls = BACKENDS[backend]
@@ -521,11 +707,17 @@ class Communicator:
         key = (op, root, bucket, self.members)
 
         def build() -> Plan:
-            tree, built = select_tree(self.topo, root, op, nbytes,
-                                      members=self.members,
-                                      policy=self.policy, view=self.view)
-            self.tree_builds += built
-            return Plan(spec, root, tree)
+            choice = select_plan(self.topo, root, op, nbytes,
+                                 members=self.members,
+                                 policy=self.policy, view=self.view,
+                                 algorithm=self.algorithm,
+                                 segment_bytes=self.segment_bytes)
+            self.tree_builds += choice.n_built
+            return Plan(spec, root, choice.tree,
+                        topo=(self.view if self.view is not None
+                              else self.topo),
+                        members=self.members,
+                        algorithm=choice.algorithm, segment=choice.segment)
 
         return self._cache.get_or_build(key, build)
 

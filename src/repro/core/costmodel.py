@@ -18,6 +18,10 @@ __all__ = [
     "binomial_bcast_cost",
     "multilevel_bcast_cost",
     "two_level_bcast_cost",
+    "bdp_segment_bytes",
+    "pipeline_segment_bytes",
+    "MAX_SEGMENTS",
+    "MIN_CHUNK_BYTES",
     "roofline_terms",
 ]
 
@@ -52,6 +56,48 @@ def two_level_bcast_cost(P: int, C: int, nbytes: float,
     inter = (C - 1) * (l_s + nbytes / b_s) if C > 1 else 0.0
     intra = math.log2(max(P // max(C, 1), 1)) * (l_f + nbytes / b_f)
     return inter + intra
+
+
+# ---------------------------------------------------------------------- #
+# Pipelining: segment sizes from the bandwidth-delay product.
+# ---------------------------------------------------------------------- #
+
+# Bound on segments per transfer: keeps the lowered-plan size (and the cost
+# of simulating one candidate in the "auto" argmin) linear in tree size
+# rather than in message bytes.
+MAX_SEGMENTS = 64
+
+# Floor on the chunk size of scatter-based algorithms: chunks below this
+# cannot amortise per-message latency/overhead, so small payloads fall back
+# to fewer (down to one) chunks and the latency-optimal tree plan wins the
+# argmin — the standard large/small-message switch.
+MIN_CHUNK_BYTES = 8192.0
+
+
+def bdp_segment_bytes(level) -> float:
+    """Bandwidth-delay product of one link class: the bytes in flight when a
+    sender streams continuously.  Segments smaller than this waste the link
+    on per-message latency; much larger ones forfeit overlap between the
+    levels of a multilevel tree."""
+    return level.bandwidth * (level.latency + level.overhead)
+
+
+def pipeline_segment_bytes(levels, nbytes: float,
+                           max_segments: int = MAX_SEGMENTS) -> float:
+    """Segment size for pipelining ``nbytes`` over a path using ``levels``.
+
+    Per link class the natural segment is its bandwidth-delay product; a
+    multilevel path is governed by the largest of them (the slowest stratum:
+    segments below its BDP pay WAN latency per piece without increasing
+    overlap).  Rounded to a power of two, clamped to [1 KiB, nbytes], and
+    floored so no transfer shatters into more than ``max_segments`` pieces.
+    """
+    if nbytes <= 0:
+        return nbytes
+    bdp = max(bdp_segment_bytes(l) for l in levels)
+    seg = 2.0 ** round(math.log2(max(bdp, 1024.0)))
+    seg = max(seg, nbytes / max_segments)
+    return min(seg, nbytes)
 
 
 # ---------------------------------------------------------------------- #

@@ -4,6 +4,14 @@ Converts a ``Tree`` into a message schedule for each of the paper's five
 collectives (Bcast, Reduce, Barrier, Gather, Scatter) plus the training-era
 extensions (Allreduce, Allgather, ReduceScatter).  A schedule is a pure data
 structure the simulator executes and property tests inspect.
+
+In the plan pipeline (select → lower → execute) this is the WHOLE-MESSAGE
+form: one ``Msg`` per tree edge per phase, simulated with per-rank phase
+hand-off by :func:`repro.core.simulator.simulate`.  Execution goes through
+the segmented rounds IR instead (:mod:`repro.core.rounds`), which splits
+these payloads into pipelined per-level segments; the ``Schedule`` form
+remains the analytical baseline the IR must converge to as segment size →
+nbytes (see tests/test_rounds.py).
 """
 from __future__ import annotations
 

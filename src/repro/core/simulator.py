@@ -1,4 +1,4 @@
-"""Event-driven postal-model executor for collective schedules.
+"""Event-driven postal-model executor for collective schedules and plans.
 
 Charges every message its TRUE per-edge cost from a ``Topology`` — even when
 the tree was built from an oblivious (flat) or 2-level (MagPIe) view.  This is
@@ -8,46 +8,65 @@ views, simulate them all on the real multilevel network.
 Model per message (postal / LogP-flavoured):
   sender occupied  [t, t + overhead + nbytes/bw]   (sequential injections)
   arrival at dst    t + latency + nbytes/bw
-Receivers in UP phases drain inbound messages sequentially with the same
-occupancy term, which penalises high fan-in on slow links — the effect that
-makes flat trees lose at low latency.
+Receivers of fold (reduce) messages drain inbound messages sequentially with
+the same occupancy term, which penalises high fan-in on slow links — the
+effect that makes flat trees lose at low latency.
+
+Two executors:
+
+:func:`simulate`
+    Whole-message :class:`~repro.core.schedule.Schedule` phases.  Phase
+    hand-off is **per-rank**: a rank starts phase i+1 work the moment its own
+    phase-i role ends (the root of a reduce→bcast allreduce broadcasts as
+    soon as *it* has folded — not when the slowest leaf has finished
+    injecting).
+:func:`simulate_rounds`
+    The lowered rounds IR (:class:`~repro.core.rounds.Lowered`): a single
+    linear pass over the send program.  Each send starts at
+    max(dependencies delivered, sender NIC free); per-rank program order is
+    FIFO.  This is where segment pipelining is priced: a node forwards
+    segment k while segment k+1 is still in flight toward it.
 """
 from __future__ import annotations
 
 from .schedule import Direction, Schedule
 from .topology import Topology
 
-__all__ = ["simulate", "simulate_op"]
+__all__ = ["simulate", "simulate_rounds", "simulate_op"]
 
 
 def simulate(sched: Schedule, topo: Topology, start: float = 0.0) -> dict[int, float]:
-    """Run ``sched`` on ``topo``; return per-rank completion times."""
-    done: dict[int, float] = {}
-    t = start
+    """Run ``sched`` on ``topo``; return per-rank completion times.
+
+    Phases hand off per rank: ``done[r]`` after phase i seeds rank r's
+    availability in phase i+1 (no global barrier between phases).
+    """
+    done = {r: start for r in sched.phases[0].tree.members()}
     for phase in sched.phases:
         if phase.direction is Direction.DOWN:
-            done = _run_down(phase, topo, t)
+            done = _run_down(phase, topo, done)
         else:
-            done = _run_up(phase, topo, t)
-        t = max(done.values())
+            done = _run_up(phase, topo, done)
     return done
 
 
-def _run_down(phase, topo: Topology, start: float) -> dict[int, float]:
+def _run_down(phase, topo: Topology, prev: dict[int, float]) -> dict[int, float]:
     tree = phase.tree
-    ready = {tree.root: start}
+    ready = {tree.root: prev[tree.root]}
     order = tree.members()  # preorder: parents before children
     for p in order:
         t = ready[p]
         for msg in phase.msgs.get(p, []):
             lvl = topo.level_of_edge(msg.src, msg.dst)
             arrival = t + lvl.latency + msg.nbytes / lvl.bandwidth
-            ready[msg.dst] = arrival
+            # the receiver is available once it holds the data AND has
+            # finished its own earlier-phase role
+            ready[msg.dst] = max(arrival, prev[msg.dst])
             t += lvl.occupy(msg.nbytes)  # next injection after this one
     return ready
 
 
-def _run_up(phase, topo: Topology, start: float) -> dict[int, float]:
+def _run_up(phase, topo: Topology, prev: dict[int, float]) -> dict[int, float]:
     tree = phase.tree
     done: dict[int, float] = {}
 
@@ -64,7 +83,7 @@ def _run_up(phase, topo: Topology, start: float) -> dict[int, float]:
             stack.append((p, True))
             stack.extend((c, False) for c in cs)
             continue
-        t = start
+        t = prev[p]  # p joins the fan-in once its prior phase ended
         for c in cs:
             (msg,) = phase.msgs[c]
             lvl = topo.level_of_edge(c, p)
@@ -85,6 +104,45 @@ def _run_up(phase, topo: Topology, start: float) -> dict[int, float]:
             lvl = topo.level_of_edge(p, pm[p])
             out[p] = done[p] + lvl.occupy(msg.nbytes)
     return out
+
+
+# ---------------------------------------------------------------------- #
+# The rounds-IR executor.
+# ---------------------------------------------------------------------- #
+
+def simulate_rounds(lowered, topo: Topology,
+                    start: float = 0.0) -> dict[int, float]:
+    """Execute a :class:`~repro.core.rounds.Lowered` program on ``topo``.
+
+    One linear pass: the send list is topologically ordered and each rank's
+    subsequence is its FIFO injection program, so every timing input (dep
+    delivery, sender NIC, receiver fold occupancy) is already known when a
+    send is reached.  Returns per-rank completion times over
+    ``lowered.members``.
+    """
+    sender_free: dict[int, float] = {}
+    recv_free: dict[int, float] = {}
+    delivered: list[float] = []
+    completion = {r: start for r in lowered.members}
+
+    for snd in lowered.sends:
+        lvl = topo.level_of_edge(snd.src, snd.dst)
+        t0 = max(start, sender_free.get(snd.src, start),
+                 *(delivered[d] for d in snd.deps)) if snd.deps else \
+            max(start, sender_free.get(snd.src, start))
+        xfer = snd.nbytes / lvl.bandwidth
+        sender_free[snd.src] = t0 + xfer + (lvl.overhead if snd.first else 0.0)
+        arrival = t0 + xfer + (lvl.latency if snd.first else 0.0)
+        if snd.kind == "reduce":
+            # folds drain sequentially at the receiver (postal occupancy)
+            done = max(arrival, recv_free.get(snd.dst, start)) + lvl.overhead
+            recv_free[snd.dst] = done
+        else:
+            done = arrival
+        delivered.append(done)
+        completion[snd.src] = max(completion[snd.src], sender_free[snd.src])
+        completion[snd.dst] = max(completion[snd.dst], done)
+    return completion
 
 
 def simulate_op(op_fn, tree, topo: Topology, nbytes: float) -> float:

@@ -81,6 +81,7 @@ class Topology:
             _, canon[:, l] = np.unique(path, axis=0, return_inverse=True)
         self.coords = canon
         self.levels = tuple(levels)
+        self._level_cache: dict[tuple[int, int], int] = {}
 
     # ------------------------------------------------------------------ #
     @property
@@ -95,8 +96,13 @@ class Topology:
         """Index of the link class used between processes p and q."""
         if p == q:
             raise ValueError("no self link")
-        diff = np.nonzero(self.coords[p] != self.coords[q])[0]
-        return int(diff[0]) if diff.size else self.nstrata
+        key = (p, q) if p < q else (q, p)
+        lvl = self._level_cache.get(key)
+        if lvl is None:
+            diff = np.nonzero(self.coords[p] != self.coords[q])[0]
+            lvl = int(diff[0]) if diff.size else self.nstrata
+            self._level_cache[key] = lvl
+        return lvl
 
     def level_of_edge(self, p: int, q: int) -> Level:
         return self.levels[self.comm_level(p, q)]

@@ -34,7 +34,8 @@ from jax import lax
 
 from .trees import Tree
 
-__all__ = ["tree_rounds", "tree_bcast", "tree_reduce", "tree_gather_flat"]
+__all__ = ["tree_rounds", "tree_bcast", "tree_reduce", "tree_gather_flat",
+           "run_lowered"]
 
 
 def tree_rounds(tree: Tree) -> list[list[tuple[int, int]]]:
@@ -63,6 +64,55 @@ def tree_rounds(tree: Tree) -> list[list[tuple[int, int]]]:
         rounds.append(this)
         r += 1
     return rounds
+
+
+def run_lowered(x: jax.Array, lowered, axis: str,
+                axis_size: int) -> jax.Array:
+    """Execute a lowered rounds-IR program (:class:`repro.core.rounds.Lowered`)
+    on devices: one ``lax.ppermute`` per device round.
+
+    The payload is reshaped into ``lowered.nchunks`` contiguous chunks (the
+    IR's data units — padding as needed); each round every participating
+    rank ships one chunk to one peer and folds (``reduce``) or overwrites
+    (``copy``) on receipt.  Chunk routing is static — per-round constant
+    tables indexed by ``axis_index`` — so the traced program is a fixed
+    sequence of ppermutes + dynamic chunk updates.  Works for any lowering
+    whose chunk ids are 0..nchunks-1 (tree bcast/allreduce, sag, rsag).
+    """
+    import numpy as np
+
+    C = max(1, lowered.nchunks)
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % C
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    buf = flat.reshape(C, -1)
+    idx = lax.axis_index(axis)
+    for rnd in lowered.device_rounds():
+        src_chunk = np.zeros(axis_size, np.int32)
+        dst_chunk = np.zeros(axis_size, np.int32)
+        is_dst = np.zeros(axis_size, bool)
+        is_red = np.zeros(axis_size, bool)
+        perm = []
+        for s, d, c, kind in rnd:
+            src_chunk[s] = c
+            dst_chunk[d] = c
+            is_dst[d] = True
+            is_red[d] = kind == "reduce"
+            perm.append((s, d))
+        carried = lax.dynamic_index_in_dim(
+            buf, jnp.asarray(src_chunk)[idx], axis=0, keepdims=False)
+        recv = lax.ppermute(carried, axis, perm)
+        di = jnp.asarray(dst_chunk)[idx]
+        cur = lax.dynamic_index_in_dim(buf, di, axis=0, keepdims=False)
+        new = jnp.where(jnp.asarray(is_red)[idx], cur + recv, recv)
+        new = jnp.where(jnp.asarray(is_dst)[idx], new, cur)
+        buf = lax.dynamic_update_index_in_dim(buf, new, di, axis=0)
+    out = buf.reshape(-1)
+    if pad:
+        out = out[:out.size - pad]
+    return out.reshape(shape)
 
 
 def tree_bcast(x: jax.Array, tree: Tree, axis: str) -> jax.Array:

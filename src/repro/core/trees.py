@@ -242,13 +242,19 @@ def best_tree(topo, root: int, op_name: str, nbytes: float,
 
     The cost-model argmin (and the op dispatch table that used to live here
     as a string-keyed dict) moved to :mod:`repro.core.communicator`, where
-    plans are also cached across calls.
+    plans are also cached across calls — and where selection now covers
+    {tree shape} x {algorithm} x {segment size}, not just the tree
+    (``select_plan`` / the ``algorithm=``/``segment_bytes=`` knobs).  This
+    shim returns only the tree leg of that choice.  The repo's test suite
+    escalates this warning to an error (pytest.ini), so in-tree callers
+    cannot silently stay on it.
     """
     import warnings
 
     warnings.warn(
         "trees.best_tree is deprecated; use "
-        "repro.core.Communicator(topo, policy='auto').plan(op, ...).tree",
+        "repro.core.Communicator(topo, policy='auto').plan(op, ...).tree "
+        "(plans now also carry the algorithm and segment-size choice)",
         DeprecationWarning, stacklevel=2)
     from .communicator import select_tree
 
