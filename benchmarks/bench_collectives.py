@@ -125,37 +125,61 @@ def large_message_sweep(sizes=None) -> list[dict]:
     return rows
 
 
-def persist(path: str | None = None, rows: list[dict] | None = None) -> dict:
-    """Run everything and write ``BENCH_collectives.json``; pass ``rows``
-    from an earlier :func:`run` to avoid re-simulating the table."""
+def build_doc(rows: list[dict] | None = None,
+              sweep_sizes=None) -> dict:
+    """The persisted document; ``sweep_sizes`` restricts the large-message
+    sweep (smoke runs)."""
     from bench_bcast_fig8 import run as fig8_run
 
     if rows is None:
         rows = run(out=open(os.devnull, "w"))
-    sweep = large_message_sweep()
+    sweep = large_message_sweep(sweep_sizes)
     fig8 = {name: [[int(nb), t] for nb, t in series]
             for name, series in fig8_run(out=open(os.devnull, "w")).items()}
-    doc = {
+    return {
         "generated_by": "benchmarks/bench_collectives.py",
         "fig8_bcast_sum_over_roots": fig8,
         "collectives": rows,
         "large_message_sweep": sweep,
         "summary": summarize(rows),
     }
-    if path is None:
-        path = os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), "BENCH_collectives.json")
-    with open(path, "w") as f:
+
+
+def _default_path() -> str:
+    return os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_collectives.json")
+
+
+def persist(path: str | None = None, rows: list[dict] | None = None) -> dict:
+    """Run everything and write ``BENCH_collectives.json``; pass ``rows``
+    from an earlier :func:`run` to avoid re-simulating the table."""
+    doc = build_doc(rows=rows)
+    with open(path or _default_path(), "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
     return doc
 
 
 if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    if "--smoke" in sys.argv[1:]:
+        # Reduced run + schema guard: regenerate a small document and check
+        # its shape against the committed artifact instead of overwriting it
+        # (see bench_schema.py) — CI's drift tripwire.
+        from bench_schema import check_against_committed
+
+        doc = build_doc(sweep_sizes=[1024.0, 65536.0, float(1 << 20)])
+        drifts = check_against_committed(doc, _default_path())
+        if drifts:
+            print("BENCH_collectives.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            raise SystemExit(1)
+        print("# smoke: schema matches committed BENCH_collectives.json")
+        raise SystemExit(0)
     rows = run()
     for line in summarize(rows):
         print("#", line)
-    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     doc = persist(rows=rows)
     big = [r for r in doc["large_message_sweep"]
            if r["size_bytes"] == float(64 << 20)]

@@ -1,0 +1,193 @@
+"""Topology discovery benchmark: recovery accuracy vs. probe noise, and the
+plan-quality cost of planning on a *discovered* topology instead of the
+ground truth.
+
+Two curves, persisted to ``BENCH_discovery.json`` at the repo root:
+
+accuracy
+    For each (topology, noise level): the fraction of probe seeds whose
+    discovered stratum partition is EXACTLY the ground truth's, whether the
+    stratum count was right, and the worst per-level parameter error of the
+    exact runs.  This quantifies where the Estefanel–Mounié style clustering
+    stops being trustworthy.
+regret
+    Simulated bcast/allreduce wall-clock of ``policy="auto"`` plans chosen
+    on the discovered topology but *charged on the true network*, relative
+    to plans chosen on the truth — the end-to-end price of discovery error
+    across the 1 KiB–64 MiB sweep.
+
+``--smoke`` runs a reduced sweep and, instead of overwriting the committed
+artifact, checks its schema against the fresh document (see
+``bench_schema.py``) — CI runs this so benchmark refactors cannot silently
+drift from the persisted JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core import Communicator
+from repro.core.discovery import fit_topology, simulated_probes
+from repro.core.simulator import simulate_rounds
+from repro.core.topology import paper_fig8_topology, tpu_v5e_multipod
+
+NOISES = (0.0, 0.02, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50, 0.60, 0.70, 0.80)
+SEEDS = tuple(range(5))
+REGRET_NOISES = (0.0, 0.05, 0.10)
+REGRET_SIZES = tuple(float(1 << k) for k in range(10, 27, 2))  # 1KiB..64MiB
+OPS = ("bcast", "allreduce")
+
+# Accuracy runs at full fleet scale (512 chips); the regret sweep plans
+# auto-policy collectives per size, so it uses the same reduced TPU config
+# as bench_collectives to stay interactive.
+ACCURACY_TOPOLOGIES = {
+    "fig8": paper_fig8_topology,
+    "tpu-2pod-512": tpu_v5e_multipod,
+}
+REGRET_TOPOLOGIES = {
+    "fig8": paper_fig8_topology,
+    "tpu-2pod-64": lambda: tpu_v5e_multipod(pods=2, boards=8,
+                                            chips_per_board=4),
+}
+
+
+def _same_partition(a, b) -> bool:
+    joint = len(np.unique(np.stack([np.asarray(a), np.asarray(b)], 1),
+                          axis=0))
+    return joint == len(np.unique(a)) == len(np.unique(b))
+
+
+def _exact(truth, disc) -> bool:
+    return disc.nstrata == truth.nstrata and all(
+        _same_partition(truth.coords[:, l], disc.coords[:, l])
+        for l in range(truth.nstrata))
+
+
+def _level_err(truth, disc) -> float:
+    """Worst relative error over levels × {latency, bandwidth, overhead}."""
+    worst = 0.0
+    for t, d in zip(truth.levels, disc.levels):
+        for a, b in ((t.latency, d.latency), (t.bandwidth, d.bandwidth),
+                     (t.overhead, d.overhead)):
+            if a > 0:
+                worst = max(worst, abs(b - a) / a)
+    return worst
+
+
+def accuracy(topologies, noises=NOISES, seeds=SEEDS) -> list[dict]:
+    rows = []
+    for tname, make in topologies.items():
+        truth = make()
+        for noise in noises:
+            exact = strata_ok = 0
+            errs = []
+            for seed in seeds:
+                disc = fit_topology(simulated_probes(truth, noise=noise,
+                                                     seed=seed))
+                strata_ok += disc.nstrata == truth.nstrata
+                if _exact(truth, disc):
+                    exact += 1
+                    errs.append(_level_err(truth, disc))
+            rows.append({
+                "topology": tname, "nprocs": truth.nprocs, "noise": noise,
+                "seeds": len(seeds),
+                "exact_partition_rate": exact / len(seeds),
+                "strata_count_rate": strata_ok / len(seeds),
+                "level_param_worst_rel_err": max(errs) if errs else None,
+            })
+    return rows
+
+
+def regret(topologies, noises=REGRET_NOISES, sizes=REGRET_SIZES,
+           seed=0) -> list[dict]:
+    rows = []
+    for tname, make in topologies.items():
+        truth = make()
+        comm_true = Communicator(truth, policy="auto")
+        for noise in noises:
+            disc = fit_topology(simulated_probes(truth, noise=noise,
+                                                 seed=seed))
+            comm_disc = Communicator(disc, policy="auto")
+            for op in OPS:
+                for nb in sizes:
+                    t_true = max(simulate_rounds(
+                        comm_true.plan(op, root=0, nbytes=nb).lower(nb),
+                        truth).values())
+                    t_disc = max(simulate_rounds(
+                        comm_disc.plan(op, root=0, nbytes=nb).lower(nb),
+                        truth).values())
+                    rows.append({
+                        "topology": tname, "noise": noise, "op": op,
+                        "size_bytes": nb, "true_s": t_true,
+                        "discovered_s": t_disc,
+                        "regret": t_disc / t_true - 1.0,
+                    })
+    return rows
+
+
+def summarize(acc_rows, reg_rows) -> list[str]:
+    out = []
+    for tname in sorted({r["topology"] for r in acc_rows}):
+        ok = [r["noise"] for r in acc_rows
+              if r["topology"] == tname and r["exact_partition_rate"] == 1.0]
+        out.append(f"{tname}: exact partition recovery up to "
+                   f"{max(ok) * 100:.0f}% probe noise" if ok else
+                   f"{tname}: no noise level with full recovery")
+    for tname in sorted({r["topology"] for r in reg_rows}):
+        worst = max(r["regret"] for r in reg_rows
+                    if r["topology"] == tname)
+        out.append(f"{tname}: worst plan regret "
+                   f"{worst * 100:.2f}% across the sweep")
+    return out
+
+
+def build_doc(smoke: bool = False) -> dict:
+    if smoke:
+        acc = accuracy({"fig8": paper_fig8_topology},
+                       noises=(0.0, 0.10), seeds=(0, 1))
+        reg = regret({"fig8": paper_fig8_topology}, noises=(0.0, 0.10),
+                     sizes=(1024.0, 65536.0, float(1 << 20)))
+    else:
+        acc = accuracy(ACCURACY_TOPOLOGIES)
+        reg = regret(REGRET_TOPOLOGIES)
+    return {
+        "generated_by": "benchmarks/bench_discovery.py",
+        "probe_sizes_bytes": [1024.0, float(1 << 20)],
+        "accuracy": acc,
+        "regret": reg,
+        "summary": summarize(acc, reg),
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_discovery.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_discovery.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_discovery.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_discovery.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

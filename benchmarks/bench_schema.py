@@ -1,0 +1,62 @@
+"""Schema guard for the persisted BENCH_*.json artifacts.
+
+The committed benchmark JSONs are consumed downstream (EXPERIMENTS.md, perf
+tracking across PRs); a benchmark refactor that silently renames or drops
+keys would corrupt that trajectory.  ``--smoke`` benchmark runs regenerate a
+reduced document and compare its *shape* — recursive key structure, with all
+scalars collapsed to their kind — against the committed file.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def schema_of(x):
+    """Recursive shape of a JSON document: dict keys and list element shape
+    are kept; scalars collapse to 'num' / 'str' / 'bool' / 'null'."""
+    if isinstance(x, dict):
+        return {k: schema_of(v) for k, v in sorted(x.items())}
+    if isinstance(x, list):
+        return [schema_of(x[0])] if x else []
+    if isinstance(x, bool):
+        return "bool"
+    if isinstance(x, (int, float)):
+        return "num"
+    if x is None:
+        return "null"
+    return "str"
+
+
+def check_against_committed(doc: dict, path: str) -> list[str]:
+    """Compare ``doc``'s schema to the committed JSON at ``path``.
+
+    Returns a list of human-readable drift messages (empty = no drift).  A
+    missing committed file is reported too: the benchmark writes it, so its
+    absence means the artifact was never persisted or got deleted.
+    """
+    if not os.path.exists(path):
+        return [f"committed benchmark artifact missing: {path}"]
+    with open(path) as f:
+        committed = json.load(f)
+    drifts: list[str] = []
+    _diff(schema_of(committed), schema_of(doc), "$", drifts)
+    return drifts
+
+
+def _diff(a, b, where: str, out: list[str]) -> None:
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                out.append(f"{where}.{k}: new key (not in committed file)")
+            elif k not in b:
+                out.append(f"{where}.{k}: dropped (present in committed file)")
+            else:
+                _diff(a[k], b[k], f"{where}.{k}", out)
+    elif isinstance(a, list) and isinstance(b, list):
+        if a and b:
+            _diff(a[0], b[0], f"{where}[0]", out)
+        # one side empty: benchmarks may legitimately emit empty lists in
+        # reduced runs; shape cannot be compared, so stay silent
+    elif a != b:
+        out.append(f"{where}: {a!r} -> {b!r}")

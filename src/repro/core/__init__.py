@@ -18,6 +18,9 @@ simulator-only use.
 from .communicator import (BACKENDS, CacheInfo, Communicator, OPS, OpSpec,
                            Plan, PlanChoice, SimResult, register_op,
                            select_plan, select_tree, size_bucket)
+from .discovery import (ProbeSet, cluster_probes, device_probes, discover,
+                        environment_topology, fit_levels, fit_topology,
+                        simulated_probes)
 from .rounds import Lowered, SegSend
 from .topology import (Level, Topology, flat_view, magpie_machine_view,
                        magpie_site_view, paper_fig8_topology,
@@ -29,6 +32,9 @@ from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
 __all__ = [
     # the front door
     "Communicator", "Plan", "PlanChoice", "SimResult", "CacheInfo",
+    # topology discovery (probe -> cluster -> fit)
+    "ProbeSet", "simulated_probes", "environment_topology", "device_probes",
+    "cluster_probes", "fit_levels", "fit_topology", "discover",
     # the rounds IR (select -> lower -> execute)
     "Lowered", "SegSend",
     # op dispatch

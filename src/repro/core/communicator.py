@@ -39,6 +39,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import os
 from typing import Any, Callable, Sequence
 
 from . import rounds as R
@@ -692,6 +693,35 @@ class Communicator:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {sorted(BACKENDS)}") from None
         self.backend = backend_cls(self)
+
+    # -- discovery ------------------------------------------------------- #
+    @classmethod
+    def from_probes(cls, probes, *, gap_factor: float | None = None,
+                    path: str | None = None, refresh: bool = False,
+                    **kwargs) -> "Communicator":
+        """Build a communicator on a topology *discovered* from probes.
+
+        ``probes`` is a :class:`repro.core.discovery.ProbeSet` (from
+        :func:`~repro.core.discovery.simulated_probes` or
+        :func:`~repro.core.discovery.device_probes`); the probe matrix is
+        clustered into strata and per-stratum link classes are fitted —
+        see :mod:`repro.core.discovery`.  ``path`` is the Fast-Tuning
+        cache: when the file exists (and ``refresh`` is false) the fitted
+        topology is loaded from it and the probe matrix is not consulted;
+        otherwise the discovered topology is persisted there.  Remaining
+        kwargs are the usual constructor knobs (policy/backend/...).
+        """
+        from . import discovery as D
+
+        if path and not refresh and os.path.exists(path):
+            topo = Topology.load(path)
+        else:
+            gf = (D.DEFAULT_GAP_FACTOR if gap_factor is None
+                  else gap_factor)
+            topo = D.fit_topology(probes, gap_factor=gf)
+            if path:
+                topo.save(path)
+        return cls(topo, **kwargs)
 
     # -- planning -------------------------------------------------------- #
     def plan(self, op: str, *, root: int | None = None,

@@ -96,7 +96,12 @@ def pipeline_segment_bytes(levels, nbytes: float,
         return nbytes
     bdp = max(bdp_segment_bytes(l) for l in levels)
     seg = 2.0 ** round(math.log2(max(bdp, 1024.0)))
-    seg = max(seg, nbytes / max_segments)
+    floor = nbytes / max_segments
+    if seg < floor:
+        # Round the floor back UP to a power of two: the raw quotient is
+        # almost never one, and a non-power-of-two segment would violate
+        # the documented invariant (and mis-bucket downstream plan keys).
+        seg = 2.0 ** math.ceil(math.log2(floor))
     return min(seg, nbytes)
 
 

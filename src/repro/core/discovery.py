@@ -1,0 +1,444 @@
+"""Automatic topology discovery: probe, cluster, and fit multilevel
+topologies at runtime.
+
+The paper's trees are "constructed automatically during execution" — but
+only *given* topology information the runtime supplies (MPICH-G2 read it
+from RSL "depths" the user wrote by hand).  This module closes the loop the
+way Estefanel & Mounié (cs/0408033) proposed: infer the logical homogeneous
+clusters from measured point-to-point performance, then cache the decision
+("Fast Tuning", cs/0408034) so a fleet is measured once, not per job.
+
+Three probe sources feed one pipeline::
+
+    probes ──> cluster_probes ──> fit_levels ──> Topology
+    (ProbeSet)  (agglomerative +   (least-squares    (canonical coords
+                 dendrogram gap     Level per         + link classes)
+                 cut → strata)      stratum)
+
+1. :func:`simulated_probes` — all-pairs postal-model timings sampled from a
+   hidden ground-truth :class:`Topology` with configurable multiplicative
+   noise.  This is the validation plane: recovery accuracy vs. noise is a
+   measurable quantity (``benchmarks/bench_discovery.py``).
+2. :func:`environment_topology` — coordinates straight from
+   ``jax.devices()`` metadata (slice_index, process_index): the modern
+   analogue of RSL-supplied topology depths.  No timing needed.
+3. :func:`device_probes` — timed round-trip ``ppermute`` exchanges at two
+   message sizes on a real mesh, fitting per-pair latency and bandwidth.
+
+The clusterer makes NO layer-count assumption: strata fall out of the
+measurements (cost-gap plateaus in the dendrogram), which is the paper's
+core thesis — as many levels as the network actually has.
+
+Front doors: :func:`discover` (source dispatch + persistence) and
+:meth:`repro.core.Communicator.from_probes`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Sequence
+
+import numpy as np
+
+from .topology import Level, Topology, level_matrix
+
+__all__ = [
+    "ProbeSet",
+    "DEFAULT_PROBE_SIZES",
+    "DEFAULT_GAP_FACTOR",
+    "simulated_probes",
+    "environment_topology",
+    "device_probes",
+    "cluster_probes",
+    "fit_levels",
+    "fit_topology",
+    "discover",
+]
+
+
+# Two sizes bracket the latency- and bandwidth-dominated regimes; the
+# per-pair affine model t = latency + nbytes/bandwidth is then exactly
+# identified (slope → bandwidth, intercept → latency).
+DEFAULT_PROBE_SIZES = (1024.0, float(1 << 20))
+
+# A dendrogram merge height more than this factor above its predecessor
+# starts a new stratum.  Within one homogeneous link class, ±10%
+# multiplicative probe noise bounds consecutive-height ratios near 1.2;
+# adjacent real link classes in every topology we model differ by ≥ 2×.
+DEFAULT_GAP_FACTOR = 1.5
+
+
+# ---------------------------------------------------------------------- #
+# Probe container
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSet:
+    """All-pairs point-to-point measurements at two message sizes.
+
+    sizes  : the two probe payloads, bytes, ascending.
+    times  : (P, P, 2) one-way delivery seconds; ``times[p, q, k]`` is a
+             lone message p→q of ``sizes[k]`` (diagonal is zero/ignored).
+    inject : optional (P, P) per-message *sender occupancy* at ``sizes[0]``,
+             from a back-to-back injection-rate probe.  Separates postal
+             overhead from latency; without it discovered overhead is 0.
+    """
+
+    sizes: tuple[float, float]
+    times: np.ndarray
+    inject: np.ndarray | None = None
+
+    def __post_init__(self):
+        t = np.asarray(self.times, dtype=float)
+        if t.ndim != 3 or t.shape[0] != t.shape[1] or t.shape[2] != 2:
+            raise ValueError(f"times must be (P, P, 2), got {t.shape}")
+        if self.sizes[0] >= self.sizes[1]:
+            raise ValueError("probe sizes must be ascending")
+        object.__setattr__(self, "times", t)
+        if self.inject is not None:
+            inj = np.asarray(self.inject, dtype=float)
+            if inj.shape != t.shape[:2]:
+                raise ValueError(
+                    f"inject must be (P, P), got {inj.shape}")
+            object.__setattr__(self, "inject", inj)
+
+    @property
+    def nprocs(self) -> int:
+        return self.times.shape[0]
+
+    def dissimilarity(self) -> np.ndarray:
+        """Symmetric (P, P) clustering metric: summed probe time over both
+        sizes, so strata that differ in *either* latency or bandwidth
+        separate; direction noise is averaged out."""
+        d = self.times.sum(axis=2)
+        return (d + d.T) / 2.0
+
+
+# ---------------------------------------------------------------------- #
+# Source 1: simulated probes from a hidden ground truth
+# ---------------------------------------------------------------------- #
+
+def simulated_probes(topo: Topology, *, noise: float = 0.0, seed: int = 0,
+                     sizes: Sequence[float] = DEFAULT_PROBE_SIZES,
+                     ) -> ProbeSet:
+    """Sample all-pairs probes from ``topo`` under the postal model.
+
+    Per pair and size the one-way time is
+    :func:`repro.core.simulator.probe_time` — ``overhead + latency +
+    nbytes/bandwidth`` — scaled by independent multiplicative noise drawn
+    uniformly from ``[1-noise, 1+noise]``.  Also emits the injection-rate
+    probe (``overhead + nbytes/bandwidth``) so the fit can separate
+    overhead from latency and recover the ground truth exactly at zero
+    noise.
+    """
+    if not 0.0 <= noise < 1.0:
+        raise ValueError(f"noise must be in [0, 1), got {noise}")
+    s1, s2 = float(sizes[0]), float(sizes[1])
+    rng = np.random.default_rng(seed)
+    lm = topo.comm_level_matrix()
+    lat = np.array([l.latency for l in topo.levels])[lm]
+    bw = np.array([l.bandwidth for l in topo.levels])[lm]
+    ovh = np.array([l.overhead for l in topo.levels])[lm]
+
+    def jitter(shape):
+        return 1.0 + noise * rng.uniform(-1.0, 1.0, shape) if noise else 1.0
+
+    times = np.stack([(ovh + lat + s / bw) * jitter(lm.shape)
+                      for s in (s1, s2)], axis=2)
+    inject = (ovh + s1 / bw) * jitter(lm.shape)
+    eye = np.eye(topo.nprocs, dtype=bool)
+    times[eye] = 0.0
+    inject[eye] = 0.0
+    return ProbeSet(sizes=(s1, s2), times=times, inject=inject)
+
+
+# ---------------------------------------------------------------------- #
+# Source 2: environment metadata (the RSL-depths analogue)
+# ---------------------------------------------------------------------- #
+
+# Default link classes per platform, coarsest first; the fitted topology
+# keeps the innermost ``S + 1`` of them for ``S`` discovered strata.
+_ENV_LEVELS = {
+    "tpu": None,  # filled below from topology's canned TPU constants
+    "generic": (
+        Level("dcn", latency=10e-6, bandwidth=6.25e9, overhead=2e-6),
+        Level("host", latency=5e-6, bandwidth=12.5e9, overhead=2e-6),
+        Level("local", latency=1e-6, bandwidth=100e9, overhead=0.5e-6),
+    ),
+}
+
+
+def environment_topology(devices: Sequence | None = None) -> Topology:
+    """Derive a topology from device metadata alone — no timing.
+
+    Strata candidates, coarsest first: ``slice_index`` (pod / ICI domain)
+    and ``process_index`` (host).  Columns that do not discriminate (all
+    devices agree) are dropped, so a single-host run yields a flat
+    single-class topology — the number of levels follows the environment,
+    never a fixed template.  Rank order is the ``jax.devices()`` order,
+    matching the flat mesh axis used by the device backends.
+    """
+    if devices is None:
+        import jax
+
+        devices = jax.devices()
+    devices = list(devices)
+    if not devices:
+        raise ValueError("no devices to derive a topology from")
+
+    def attr(d, name):
+        v = getattr(d, name, None)
+        return int(v) if v is not None else 0
+
+    cols = [
+        [attr(d, "slice_index") for d in devices],
+        [attr(d, "process_index") for d in devices],
+    ]
+    cols = [c for c in cols if len(set(c)) > 1]
+    coords = (np.stack(cols, axis=1) if cols
+              else np.zeros((len(devices), 0), dtype=np.int64))
+
+    platform = getattr(devices[0], "platform", "cpu")
+    if platform == "tpu":
+        from .topology import DCN, ICI, ICI_FAR
+
+        classes = (DCN, ICI_FAR, ICI)
+    else:
+        classes = _ENV_LEVELS["generic"]
+    need = coords.shape[1] + 1
+    levels = list(classes[-need:])
+    while len(levels) < need:  # more strata than canned classes: pad coarse
+        levels.insert(0, classes[0])
+    return Topology(coords, levels)
+
+
+# ---------------------------------------------------------------------- #
+# Source 3: timed device probes (round-trip ppermute)
+# ---------------------------------------------------------------------- #
+
+def device_probes(*, sizes: Sequence[float] = DEFAULT_PROBE_SIZES,
+                  repeats: int = 3, roundtrips: int = 4,
+                  devices: Sequence | None = None) -> ProbeSet:
+    """Measure per-pair one-way time on a real mesh via ``ppermute``.
+
+    For every pair (i, j) a jitted program bounces a payload i→j→i
+    ``roundtrips`` times; the best of ``repeats`` timed runs divided by
+    ``2 * roundtrips`` estimates the one-way time.  Two payload sizes give
+    the affine fit its two points.  Cost is O(P²) compilations — this is
+    the *once-per-fleet* measurement the persistence cache
+    (:func:`discover` ``path=``) exists to amortise.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.compat import shard_map
+
+    devices = list(devices if devices is not None else jax.devices())
+    P = len(devices)
+    if P < 2:
+        raise ValueError(f"device probes need >= 2 devices, got {P}")
+    mesh = jax.sharding.Mesh(np.array(devices), ("probe",))
+    spec = jax.sharding.PartitionSpec("probe")
+    s1, s2 = float(sizes[0]), float(sizes[1])
+    times = np.zeros((P, P, 2))
+
+    for si, s in enumerate((s1, s2)):
+        n = max(int(s) // 4, 1)  # float32 payload of ~s bytes per device
+        x = jnp.zeros((P, n), jnp.float32)
+        for i in range(P):
+            for j in range(P):
+                if i == j:
+                    continue
+
+                def bounce(v, fwd=((i, j),), bwd=((j, i),)):
+                    def body(_, u):
+                        u = lax.ppermute(u, "probe", fwd)
+                        return lax.ppermute(u, "probe", bwd)
+                    return lax.fori_loop(0, roundtrips, body, v)
+
+                f = jax.jit(shard_map(bounce, mesh=mesh, in_specs=spec,
+                                      out_specs=spec))
+                jax.block_until_ready(f(x))  # compile + warm
+                best = math.inf
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(f(x))
+                    best = min(best, time.perf_counter() - t0)
+                times[i, j, si] = best / (2 * roundtrips)
+    return ProbeSet(sizes=(s1, s2), times=times, inject=None)
+
+
+# ---------------------------------------------------------------------- #
+# The pipeline: cluster → cut → fit
+# ---------------------------------------------------------------------- #
+
+def _average_linkage(D: np.ndarray) -> list[tuple[int, int, float]]:
+    """UPGMA agglomerative clustering on a symmetric dissimilarity matrix.
+
+    Returns the merge sequence ``(i, j, height)`` — representatives are
+    original point indices; heights are non-decreasing (average linkage is
+    reducible, so the dendrogram has no inversions).  Lance-Williams row
+    updates keep each of the P-1 merges at one vectorised argmin + O(P)
+    update, comfortably fast at P = 512.
+    """
+    P = D.shape[0]
+    Dm = D.astype(float).copy()
+    np.fill_diagonal(Dm, np.inf)
+    sizes = np.ones(P)
+    merges: list[tuple[int, int, float]] = []
+    for _ in range(P - 1):
+        flat = np.argmin(Dm)
+        i, j = divmod(int(flat), P)
+        if i > j:
+            i, j = j, i
+        h = float(Dm[i, j])
+        ni, nj = sizes[i], sizes[j]
+        row = (ni * Dm[i] + nj * Dm[j]) / (ni + nj)
+        Dm[i, :] = row
+        Dm[:, i] = row
+        Dm[i, i] = np.inf
+        Dm[j, :] = np.inf
+        Dm[:, j] = np.inf
+        sizes[i] = ni + nj
+        merges.append((i, j, h))
+    return merges
+
+
+def _labels_at(P: int, merges: Sequence[tuple[int, int, float]],
+               threshold: float) -> np.ndarray:
+    """Cluster labels after applying every merge with height < threshold."""
+    parent = np.arange(P)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i, j, h in merges:
+        if h < threshold:
+            parent[find(j)] = find(i)
+    return np.array([find(r) for r in range(P)])
+
+
+def cluster_probes(probes: ProbeSet, *,
+                   gap_factor: float = DEFAULT_GAP_FACTOR) -> np.ndarray:
+    """Infer per-process stratum coordinates from a probe matrix.
+
+    Agglomerative clustering orders all merges by cost; plateaus separated
+    by gaps (consecutive merge heights with ratio > ``gap_factor``) are the
+    link classes.  Each gap becomes one dendrogram cut = one stratum; cuts
+    are applied coarsest first so column 0 of the result is the slowest
+    stratum, matching :class:`Topology`'s convention.  Zero gaps (a
+    homogeneous network) yield a (P, 0) coordinate array — a single link
+    class, no strata.
+    """
+    P = probes.nprocs
+    if P < 2:
+        return np.zeros((P, 0), dtype=np.int64)
+    merges = _average_linkage(probes.dissimilarity())
+    heights = sorted(h for _, _, h in merges)
+    cuts = []
+    for a, b in zip(heights, heights[1:]):
+        if b > gap_factor * max(a, 1e-15):
+            cuts.append(math.sqrt(max(a, 1e-15) * b))
+    if not cuts:
+        return np.zeros((P, 0), dtype=np.int64)
+    cols = [_labels_at(P, merges, c) for c in sorted(cuts, reverse=True)]
+    return np.stack(cols, axis=1)
+
+
+def fit_levels(probes: ProbeSet, coords: np.ndarray) -> list[Level]:
+    """Least-squares :class:`Level` per link class given the strata.
+
+    For class ``l`` the samples are every ordered pair at that level, both
+    probe sizes; the affine fit ``t = a + s·b`` gives ``bandwidth = 1/b``
+    and intercept ``a = latency + overhead``.  When the injection-rate
+    probe is present, per-message occupancy minus the bandwidth term
+    separates ``overhead`` out of the intercept — at zero noise the ground
+    truth is recovered exactly.  A class with no pairs (e.g. singleton leaf
+    groups) inherits its nearest coarser fitted class.
+    """
+    P = probes.nprocs
+    nstrata = coords.shape[1]
+    s1, s2 = probes.sizes
+    lm = level_matrix(coords)
+    off = ~np.eye(P, dtype=bool)
+
+    levels: list[Level] = []
+    for l in range(nstrata + 1):
+        mask = (lm == l) & off
+        if not mask.any():
+            if not levels:
+                raise ValueError("cannot fit any link class from "
+                                 f"{P} process(es)")
+            prev = levels[-1]
+            levels.append(Level(f"d{l}", prev.latency, prev.bandwidth,
+                                prev.overhead))
+            continue
+        t1 = float(probes.times[..., 0][mask].mean())
+        t2 = float(probes.times[..., 1][mask].mean())
+        slope = max((t2 - t1) / (s2 - s1), 1e-30)
+        bandwidth = 1.0 / slope
+        intercept = ((t1 - s1 * slope) + (t2 - s2 * slope)) / 2.0
+        overhead = 0.0
+        if probes.inject is not None:
+            overhead = max(
+                float(probes.inject[mask].mean()) - s1 * slope, 0.0)
+        latency = max(intercept - overhead, 0.0)
+        levels.append(Level(f"d{l}", latency, bandwidth, overhead))
+    return levels
+
+
+def fit_topology(probes: ProbeSet, *,
+                 gap_factor: float = DEFAULT_GAP_FACTOR) -> Topology:
+    """The full pipeline: probes → strata → fitted levels → Topology."""
+    coords = cluster_probes(probes, gap_factor=gap_factor)
+    return Topology(coords, fit_levels(probes, coords))
+
+
+# ---------------------------------------------------------------------- #
+# Front door
+# ---------------------------------------------------------------------- #
+
+def discover(source: str = "sim", *, topo: Topology | None = None,
+             noise: float = 0.0, seed: int = 0,
+             sizes: Sequence[float] = DEFAULT_PROBE_SIZES,
+             gap_factor: float = DEFAULT_GAP_FACTOR,
+             devices: Sequence | None = None,
+             path: str | None = None, refresh: bool = False,
+             **device_kw) -> Topology:
+    """Discover a topology from one of the three probe sources.
+
+    source : "sim" (requires ``topo=`` as hidden ground truth; ``noise``,
+        ``seed`` control the probe sampling), "env" (``jax.devices()``
+        metadata), or "device" (timed ppermute probes; extra kwargs are
+        forwarded to :func:`device_probes`).
+    path : Fast-Tuning cache.  When the file exists (and ``refresh`` is
+        false) it is loaded and NO probing happens; otherwise discovery
+        runs once and persists its result there.
+    """
+    if path and not refresh and os.path.exists(path):
+        return Topology.load(path)
+    if source == "sim":
+        if topo is None:
+            raise ValueError("source='sim' needs topo= as ground truth")
+        t = fit_topology(simulated_probes(topo, noise=noise, seed=seed,
+                                          sizes=sizes),
+                         gap_factor=gap_factor)
+    elif source == "env":
+        t = environment_topology(devices)
+    elif source == "device":
+        t = fit_topology(device_probes(sizes=sizes, devices=devices,
+                                       **device_kw),
+                         gap_factor=gap_factor)
+    else:
+        raise ValueError(f"unknown probe source {source!r}; "
+                         "choose from 'sim', 'env', 'device'")
+    if path:
+        t.save(path)
+    return t

@@ -348,7 +348,10 @@ def _chunk_bcast_down(tree, sub, up, nbytes, emit) -> None:
 
 def _leaf_groups(topo: Topology, members: Sequence[int]) -> list[list[int]]:
     """Members partitioned into leaf groups (finest stratum), in member
-    order — the stratum where rings run."""
+    order — the stratum where rings run.  A stratum-less topology (e.g. a
+    discovered homogeneous network) is one big leaf group."""
+    if topo.nstrata == 0:
+        return [list(members)]
     return list(topo.groups_at(list(members), topo.nstrata - 1).values())
 
 

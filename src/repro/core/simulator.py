@@ -32,7 +32,7 @@ from __future__ import annotations
 from .schedule import Direction, Schedule
 from .topology import Topology
 
-__all__ = ["simulate", "simulate_rounds", "simulate_op"]
+__all__ = ["simulate", "simulate_rounds", "simulate_op", "probe_time"]
 
 
 def simulate(sched: Schedule, topo: Topology, start: float = 0.0) -> dict[int, float]:
@@ -149,3 +149,17 @@ def simulate_op(op_fn, tree, topo: Topology, nbytes: float) -> float:
     """Convenience: max completion time of op_fn(tree, nbytes) on topo."""
     sched = op_fn(tree, nbytes) if nbytes is not None else op_fn(tree)
     return max(simulate(sched, topo).values())
+
+
+def probe_time(topo: Topology, p: int, q: int, nbytes: float) -> float:
+    """One-way delivery time of a single point-to-point probe p→q.
+
+    This is the postal-model quantity a timed ping observes: the sender's
+    per-message cost (overhead) is on the critical path of a lone message,
+    so the measured time is ``overhead + latency + nbytes/bandwidth``.
+    :func:`repro.core.discovery.simulated_probes` is the vectorised
+    all-pairs version of exactly this expression; keeping the scalar form
+    here pins the probe semantics to the simulator's cost model.
+    """
+    lvl = topo.level_of_edge(p, q)
+    return lvl.overhead + lvl.latency + nbytes / lvl.bandwidth

@@ -16,6 +16,7 @@ strata has ``S + 1`` link classes ("levels"):
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Sequence
 
 import numpy as np
@@ -23,12 +24,28 @@ import numpy as np
 __all__ = [
     "Level",
     "Topology",
+    "level_matrix",
     "paper_fig8_topology",
     "tpu_v5e_multipod",
     "magpie_machine_view",
     "magpie_site_view",
     "flat_view",
 ]
+
+
+def level_matrix(coords: np.ndarray) -> np.ndarray:
+    """(P, P) link-class index for every pair given (P, S) coordinates.
+
+    ``[p, q]`` is the first stratum where p and q diverge, or ``S`` when
+    all columns agree (including the diagonal).  This is THE pair-level
+    rule — :meth:`Topology.comm_level_matrix` and the discovery fitter
+    both defer to it so they can never disagree.
+    """
+    P, S = coords.shape
+    if S == 0:
+        return np.zeros((P, P), dtype=np.int64)
+    mism = coords[:, None, :] != coords[None, :, :]
+    return np.where(mism.any(axis=2), mism.argmax(axis=2), S).astype(np.int64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +98,7 @@ class Topology:
             _, canon[:, l] = np.unique(path, axis=0, return_inverse=True)
         self.coords = canon
         self.levels = tuple(levels)
-        self._level_cache: dict[tuple[int, int], int] = {}
+        self._level_matrix: np.ndarray | None = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -92,17 +109,28 @@ class Topology:
     def nstrata(self) -> int:
         return self.coords.shape[1]
 
+    def comm_level_matrix(self) -> np.ndarray:
+        """(P, P) int array: link-class index for every pair, in one
+        broadcast pass (a single argmax over coordinate mismatches).
+
+        ``[p, q]`` is the first stratum where p and q diverge, or
+        ``nstrata`` when all columns agree — which includes the diagonal
+        (a rank trivially shares every coordinate with itself; the scalar
+        :meth:`comm_level` still rejects self links).  Built lazily once
+        and reused: plan construction touches O(P²) pairs, and growing a
+        dict entry-by-entry dominated tree building on 512-chip fleets.
+        """
+        if self._level_matrix is None:
+            lm = level_matrix(self.coords)
+            lm.setflags(write=False)
+            self._level_matrix = lm
+        return self._level_matrix
+
     def comm_level(self, p: int, q: int) -> int:
         """Index of the link class used between processes p and q."""
         if p == q:
             raise ValueError("no self link")
-        key = (p, q) if p < q else (q, p)
-        lvl = self._level_cache.get(key)
-        if lvl is None:
-            diff = np.nonzero(self.coords[p] != self.coords[q])[0]
-            lvl = int(diff[0]) if diff.size else self.nstrata
-            self._level_cache[key] = lvl
-        return lvl
+        return int(self.comm_level_matrix()[p, q])
 
     def level_of_edge(self, p: int, q: int) -> Level:
         return self.levels[self.comm_level(p, q)]
@@ -118,6 +146,49 @@ class Topology:
         for m in members:
             out.setdefault(int(self.coords[m, stratum]), []).append(m)
         return out
+
+    # ------------------------------------------------------------------ #
+    # Persistence — the "Fast Tuning" cache (Estefanel & Mounié,
+    # cs/0408034): discovery runs once per fleet, the fitted topology is
+    # written to disk, and later runs reload it instead of re-measuring.
+    # ------------------------------------------------------------------ #
+    def to_json(self) -> str:
+        """Canonical JSON form: coords (already canonicalised) + levels."""
+        doc = {
+            "format": "repro.topology/v1",
+            "coords": self.coords.tolist(),
+            "levels": [
+                {"name": l.name, "latency": l.latency,
+                 "bandwidth": l.bandwidth, "overhead": l.overhead}
+                for l in self.levels
+            ],
+        }
+        return json.dumps(doc, indent=1)
+
+    @classmethod
+    def from_json(cls, doc: "str | dict") -> "Topology":
+        """Inverse of :meth:`to_json`; accepts the string or parsed dict."""
+        if isinstance(doc, str):
+            doc = json.loads(doc)
+        fmt = doc.get("format", "repro.topology/v1")
+        if fmt != "repro.topology/v1":
+            raise ValueError(f"unknown topology format {fmt!r}")
+        coords = np.asarray(doc["coords"], dtype=np.int64)
+        if coords.ndim == 1:  # S == 0 round-trips as a list of empty rows
+            coords = coords.reshape(len(doc["coords"]), 0)
+        levels = [Level(l["name"], l["latency"], l["bandwidth"],
+                        l.get("overhead", 0.0)) for l in doc["levels"]]
+        return cls(coords, levels)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Topology":
+        with open(path) as f:
+            return cls.from_json(f.read())
 
     # ------------------------------------------------------------------ #
     def collapse(self, stratum: int) -> "Topology":

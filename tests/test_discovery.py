@@ -1,0 +1,290 @@
+"""Property tests for the topology discovery subsystem.
+
+The contract under test (ISSUE 3 acceptance): from simulated probes with up
+to 10% multiplicative noise, the clusterer recovers the EXACT stratum
+partition of both canned topologies; the fitted levels reproduce the ground
+truth at zero noise; persistence round-trips canonicalised coords + levels;
+and plans built on a discovered topology cost within 5% of ground-truth
+plans when charged on the true network.
+"""
+import math
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Communicator
+from repro.core.discovery import (DEFAULT_PROBE_SIZES, ProbeSet,
+                                  cluster_probes, discover,
+                                  environment_topology, fit_levels,
+                                  fit_topology, simulated_probes)
+from repro.core.simulator import probe_time, simulate_rounds
+from repro.core.topology import (LAN, SMP, WAN, Level, Topology,
+                                 paper_fig8_topology, tpu_v5e_multipod)
+
+
+# ---------------------------------------------------------------------- #
+# helpers
+# ---------------------------------------------------------------------- #
+
+def same_partition(a, b) -> bool:
+    """True iff two label vectors induce the identical equivalence classes
+    (labels may differ — only the grouping matters)."""
+    a, b = np.asarray(a), np.asarray(b)
+    joint = len(np.unique(np.stack([a, b], axis=1), axis=0))
+    return joint == len(np.unique(a)) == len(np.unique(b))
+
+
+def assert_exact_strata(truth: Topology, disc: Topology):
+    assert disc.nprocs == truth.nprocs
+    assert disc.nstrata == truth.nstrata, (
+        f"expected {truth.nstrata} strata, discovered {disc.nstrata}")
+    for l in range(truth.nstrata):
+        assert same_partition(truth.coords[:, l], disc.coords[:, l]), \
+            f"stratum {l} partition differs"
+
+
+# ---------------------------------------------------------------------- #
+# recovery: the clusterer finds the exact strata
+# ---------------------------------------------------------------------- #
+
+def test_noiseless_recovery_is_exact_fig8():
+    truth = paper_fig8_topology()
+    disc = fit_topology(simulated_probes(truth, noise=0.0))
+    assert_exact_strata(truth, disc)
+    # with the injection-rate probe the postal parameters come back exactly
+    for got, want in zip(disc.levels, truth.levels):
+        assert got.latency == pytest.approx(want.latency, rel=1e-9)
+        assert got.bandwidth == pytest.approx(want.bandwidth, rel=1e-9)
+        assert got.overhead == pytest.approx(want.overhead, rel=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.0, 0.10), st.integers(0, 2 ** 16))
+def test_fig8_partition_recovered_under_noise(noise, seed):
+    truth = paper_fig8_topology()
+    disc = fit_topology(simulated_probes(truth, noise=noise, seed=seed))
+    assert_exact_strata(truth, disc)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_tpu_v5e_multipod_partition_recovered_at_10pct(seed):
+    truth = tpu_v5e_multipod()  # 512 chips, the perf-relevant scale
+    disc = fit_topology(simulated_probes(truth, noise=0.10, seed=seed))
+    assert_exact_strata(truth, disc)
+
+
+def test_homogeneous_network_discovers_zero_strata():
+    """No cost gaps -> no strata: one link class, and the communicator
+    still plans/executes on the flat result (the paper's degenerate case)."""
+    truth = Topology(np.zeros((8, 1)), [SMP, SMP])
+    disc = fit_topology(simulated_probes(truth, noise=0.05, seed=7))
+    assert disc.nstrata == 0
+    assert len(disc.levels) == 1
+    t = Communicator(disc, policy="auto").bcast(4e3, root=0).time
+    assert t > 0
+
+
+def test_probes_match_simulator_probe_time():
+    """The vectorised probe matrix IS the simulator's scalar probe
+    semantics, pairwise."""
+    topo = paper_fig8_topology()
+    p = simulated_probes(topo, noise=0.0)
+    for a, b in [(0, 1), (0, 17), (0, 47), (20, 40)]:
+        for k, s in enumerate(p.sizes):
+            assert p.times[a, b, k] == pytest.approx(
+                probe_time(topo, a, b, s), rel=1e-12)
+
+
+def test_probeset_validates_shapes():
+    with pytest.raises(ValueError):
+        ProbeSet(sizes=(1e3, 1e6), times=np.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        ProbeSet(sizes=(1e6, 1e3), times=np.zeros((4, 4, 2)))
+    with pytest.raises(ValueError):
+        ProbeSet(sizes=(1e3, 1e6), times=np.zeros((4, 4, 2)),
+                 inject=np.zeros((3, 3)))
+
+
+# ---------------------------------------------------------------------- #
+# persistence + canonicalisation
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("topo", [
+    paper_fig8_topology(),
+    tpu_v5e_multipod(pods=2, boards=4, chips_per_board=4),
+], ids=["fig8", "tpu"])
+def test_json_roundtrip(topo):
+    back = Topology.from_json(topo.to_json())
+    assert np.array_equal(back.coords, topo.coords)
+    assert back.levels == topo.levels
+
+
+def test_json_roundtrip_of_discovered_topology():
+    disc = fit_topology(simulated_probes(paper_fig8_topology(),
+                                         noise=0.08, seed=11))
+    back = Topology.from_json(disc.to_json())
+    assert np.array_equal(back.coords, disc.coords)
+    assert back.levels == disc.levels
+
+
+def test_json_roundtrip_zero_strata():
+    topo = Topology(np.zeros((4, 0), dtype=np.int64), [SMP])
+    back = Topology.from_json(topo.to_json())
+    assert back.coords.shape == (4, 0)
+    assert back.levels == topo.levels
+
+
+@st.composite
+def random_topologies(draw):
+    sites = draw(st.integers(1, 4))
+    coords, mid = [], 0
+    for s in range(sites):
+        for _ in range(draw(st.integers(1, 3))):
+            coords += [[s, mid]] * draw(st.integers(1, 4))
+            mid += 1
+    return Topology(np.array(coords), [WAN, LAN, SMP])
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_topologies())
+def test_canonicalisation_is_idempotent(topo):
+    again = Topology(topo.coords, topo.levels)
+    assert np.array_equal(again.coords, topo.coords)
+    # and a json round-trip of the canonical form is the identity
+    back = Topology.from_json(topo.to_json())
+    assert np.array_equal(back.coords, topo.coords)
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_topologies())
+def test_comm_level_matrix_matches_scalar(topo):
+    lm = topo.comm_level_matrix()
+    assert lm.shape == (topo.nprocs, topo.nprocs)
+    for p in range(topo.nprocs):
+        for q in range(topo.nprocs):
+            if p == q:
+                assert lm[p, q] == topo.nstrata
+            else:
+                diff = np.nonzero(topo.coords[p] != topo.coords[q])[0]
+                want = int(diff[0]) if diff.size else topo.nstrata
+                assert lm[p, q] == want == topo.comm_level(p, q)
+    with pytest.raises(ValueError):
+        topo.comm_level(0, 0)
+
+
+# ---------------------------------------------------------------------- #
+# the Fast-Tuning cache
+# ---------------------------------------------------------------------- #
+
+def test_discover_persists_and_reloads(tmp_path):
+    truth = paper_fig8_topology()
+    path = str(tmp_path / "fleet.topo.json")
+    first = discover("sim", topo=truth, noise=0.05, seed=3, path=path)
+    # second call must NOT re-probe: hand it a different ground truth and
+    # check the cached fit comes back
+    other = tpu_v5e_multipod(pods=2, boards=2, chips_per_board=2)
+    cached = discover("sim", topo=other, path=path)
+    assert np.array_equal(cached.coords, first.coords)
+    assert cached.levels == first.levels
+    refreshed = discover("sim", topo=other, path=path, refresh=True)
+    assert refreshed.nprocs == other.nprocs
+
+
+def test_from_probes_uses_cache_path(tmp_path):
+    path = str(tmp_path / "fleet.topo.json")
+    paper_fig8_topology().save(path)
+    probes = simulated_probes(
+        tpu_v5e_multipod(pods=2, boards=2, chips_per_board=2))
+    comm = Communicator.from_probes(probes, path=path, policy="paper")
+    assert comm.topo.nprocs == 48  # loaded fig8, probes never consulted
+    comm2 = Communicator.from_probes(probes, path=path, refresh=True,
+                                     policy="paper")
+    assert comm2.topo.nprocs == 8  # refitted and re-persisted
+    assert Topology.load(path).nprocs == 8
+
+
+# ---------------------------------------------------------------------- #
+# environment probes
+# ---------------------------------------------------------------------- #
+
+def _fake_device(process_index, slice_index=None, platform="cpu"):
+    return types.SimpleNamespace(process_index=process_index,
+                                 slice_index=slice_index, platform=platform)
+
+
+def test_environment_topology_two_strata():
+    devs = [_fake_device(process_index=i // 2, slice_index=i // 4)
+            for i in range(8)]
+    topo = environment_topology(devs)
+    assert topo.nstrata == 2  # [slice, process]
+    assert same_partition(topo.coords[:, 0], [i // 4 for i in range(8)])
+    assert same_partition(topo.coords[:, 1], [i // 2 for i in range(8)])
+
+
+def test_environment_topology_drops_constant_strata():
+    devs = [_fake_device(process_index=i // 2) for i in range(8)]
+    topo = environment_topology(devs)
+    assert topo.nstrata == 1  # slice column constant -> dropped
+    single = environment_topology([_fake_device(0) for _ in range(4)])
+    assert single.nstrata == 0  # one host: flat, one link class
+    assert len(single.levels) == 1
+
+
+def test_device_probes_on_host_mesh(subproc):
+    """End-to-end timed probes on a forced 2-device host platform: the
+    matrix is fully populated, positive, and feeds the fitting pipeline
+    (host 'links' are homogeneous, so no strata should appear)."""
+    out = subproc("""
+from repro.core.discovery import device_probes, fit_topology
+p = device_probes(repeats=1, roundtrips=2, sizes=(1024.0, 65536.0))
+assert p.times.shape == (2, 2, 2), p.times.shape
+assert (p.times[0, 1] > 0).all() and (p.times[1, 0] > 0).all()
+t = fit_topology(p)
+assert t.nprocs == 2 and t.nstrata == 0, (t.nprocs, t.nstrata)
+print("DEVICE_PROBES_OK")
+""", n_devices=2)
+    assert "DEVICE_PROBES_OK" in out
+
+
+def test_environment_topology_tpu_levels():
+    devs = [_fake_device(process_index=i // 4, slice_index=i // 8,
+                         platform="tpu") for i in range(16)]
+    topo = environment_topology(devs)
+    assert [l.name for l in topo.levels] == ["dcn", "ici_far", "ici"]
+
+
+# ---------------------------------------------------------------------- #
+# plan quality: discovered topologies steer plans as well as the truth
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("noise,seed", [(0.0, 0), (0.10, 3), (0.10, 9)])
+def test_from_probes_plan_regret_within_5pct(noise, seed):
+    truth = paper_fig8_topology()
+    comm_true = Communicator(truth, policy="auto")
+    comm_disc = Communicator.from_probes(
+        simulated_probes(truth, noise=noise, seed=seed), policy="auto")
+    for op in ("bcast", "allreduce"):
+        for k in (10, 14, 18, 22, 26):  # 1 KiB .. 64 MiB
+            nb = float(1 << k)
+            t_true = max(simulate_rounds(
+                comm_true.plan(op, root=0, nbytes=nb).lower(nb),
+                truth).values())
+            t_disc = max(simulate_rounds(
+                comm_disc.plan(op, root=0, nbytes=nb).lower(nb),
+                truth).values())
+            assert t_disc <= t_true * 1.05, (
+                f"{op} @ {nb:.0f}B: discovered plan {t_disc:.6f}s vs "
+                f"ground truth {t_true:.6f}s")
+
+
+def test_fitted_levels_average_out_noise():
+    """Per-level parameters are fitted over O(P^2) pairs, so 10% per-pair
+    noise shrinks to ~1% on the class estimate (the reason plan regret
+    stays within tolerance)."""
+    truth = paper_fig8_topology()
+    disc = fit_topology(simulated_probes(truth, noise=0.10, seed=5))
+    for got, want in zip(disc.levels, truth.levels):
+        assert got.latency == pytest.approx(want.latency, rel=0.05)
+        assert got.bandwidth == pytest.approx(want.bandwidth, rel=0.05)

@@ -4,8 +4,10 @@ import math
 import pytest
 
 from repro.core import schedule as S
-from repro.core.costmodel import (binomial_bcast_cost, multilevel_bcast_cost,
-                                  two_level_bcast_cost, roofline_terms)
+from repro.core.costmodel import (MAX_SEGMENTS, binomial_bcast_cost,
+                                  multilevel_bcast_cost,
+                                  pipeline_segment_bytes, roofline_terms,
+                                  two_level_bcast_cost)
 from repro.core.simulator import simulate
 from repro.core.topology import (Topology, WAN, LAN, SMP,
                                  paper_fig8_topology, magpie_machine_view,
@@ -180,3 +182,27 @@ def test_roofline_terms():
                        chips=256, dcn_bytes=1e8)
     assert r["bound"] in ("compute", "memory", "collective")
     assert r["step_s"] == max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def test_pipeline_segment_bytes_power_of_two_invariant():
+    """Regression: the nbytes/max_segments clamp used to return a raw
+    quotient (e.g. 1562500.0 for 100 MB), violating the documented
+    power-of-two invariant; the floored value must round back UP so the
+    segment count stays <= MAX_SEGMENTS."""
+    levels = [WAN, LAN, SMP]
+    for nbytes in (1e8, 3e7, float(1 << 26), float(1 << 26) * 1.37, 5e3):
+        seg = pipeline_segment_bytes(levels, nbytes)
+        assert 0 < seg <= nbytes
+        if seg < nbytes:  # whole-message clamp is the one allowed exception
+            assert seg == 2.0 ** round(math.log2(seg)), (nbytes, seg)
+        assert math.ceil(nbytes / seg) <= MAX_SEGMENTS
+
+
+def test_probe_time_is_postal_one_way():
+    from repro.core.simulator import probe_time
+
+    topo = paper_fig8_topology()
+    lvl = topo.level_of_edge(0, 47)  # cross-site: WAN
+    assert lvl.name == "wan"
+    assert probe_time(topo, 0, 47, 1e6) == pytest.approx(
+        lvl.overhead + lvl.latency + 1e6 / lvl.bandwidth)
