@@ -1,0 +1,187 @@
+"""Elastic-collectives benchmark: recovery latency and post-repair regret.
+
+For each (topology, failure scenario, op) the benchmark runs the full
+elastic loop on the simulation plane and decomposes recovery latency into
+its terms, persisted to ``BENCH_elastic.json`` at the repo root:
+
+  t_healthy_s        the collective before the failure
+  stalled_ranks      ranks the fault-injected simulator reports starving
+                     (the detector's signal)
+  repair_wall_s      host time for ``Communicator.repair`` — plan-cache
+                     surgery only, no tree rebuilds
+  t_post_repair_s    the collective on the spliced plans
+  t_fresh_s          the same collective on plans rebuilt from scratch
+                     over the survivors
+  regret             t_post_repair / t_fresh - 1
+
+A second section quantifies the targeted drift re-probe: representative
+pair count vs the all-pairs probe count of full discovery, and the wall
+time of ``Communicator.refresh``.
+
+``--smoke`` runs the fig8 subset and checks the committed artifact's
+schema instead of overwriting it (see ``bench_schema.py``); CI runs this.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+from repro.core import Communicator
+from repro.core import discovery as D
+from repro.core.simulator import simulate_rounds
+from repro.core.topology import (Level, Topology, paper_fig8_topology,
+                                 tpu_v5e_multipod)
+
+OPS = ("bcast", "allreduce")
+
+SCENARIOS = {
+    "fig8": (paper_fig8_topology, 64e3, {
+        "coordinator": [16],
+        "half-machine": list(range(16, 24)),
+        "scattered": [5, 17, 33, 40],
+        "whole-site-machine": list(range(16, 32)),
+    }),
+    "tpu-2pod-512": (tpu_v5e_multipod, 1e6, {
+        "chip": [100],
+        "board": list(range(16, 32)),
+        "pod-coordinator": [256],
+        "whole-pod": list(range(256, 512)),
+    }),
+}
+
+
+def _run(comm, op, nbytes):
+    return (comm.allreduce(nbytes) if op == "allreduce"
+            else getattr(comm, op)(nbytes, root=0)).time
+
+
+def recovery(topologies=("fig8", "tpu-2pod-512")) -> list[dict]:
+    rows = []
+    for tname in topologies:
+        make, nbytes, fails = SCENARIOS[tname]
+        topo = make()
+        for sname, dead in fails.items():
+            for op in OPS:
+                comm = Communicator(topo, policy="paper", backend="sim")
+                t_healthy = _run(comm, op, nbytes)
+                plan = comm.plan(op, root=0, nbytes=nbytes)
+                stalled = sum(
+                    1 for t in simulate_rounds(
+                        plan.lower(nbytes), topo,
+                        fail_at={r: 0.0 for r in dead}).values()
+                    if t == math.inf)
+                tb = comm.cache_info().tree_builds
+                w0 = time.perf_counter()
+                rep = comm.repair(failed=dead)
+                repair_wall = time.perf_counter() - w0
+                assert comm.cache_info().tree_builds == tb
+                t_post = _run(comm, op, nbytes)
+                survivors = [m for m in range(topo.nprocs)
+                             if m not in set(dead)]
+                fresh = Communicator(topo, policy="paper", backend="sim",
+                                     members=survivors)
+                t_fresh = _run(fresh, op, nbytes)
+                rows.append({
+                    "topology": tname, "scenario": sname, "op": op,
+                    "size_bytes": nbytes, "n_failed": len(dead),
+                    "t_healthy_s": t_healthy,
+                    "stalled_ranks": stalled,
+                    "repair_wall_s": repair_wall,
+                    "plans_repaired": rep.repaired,
+                    "plans_evicted": rep.evicted,
+                    "t_post_repair_s": t_post,
+                    "t_fresh_s": t_fresh,
+                    "regret": t_post / t_fresh - 1.0,
+                })
+    return rows
+
+
+def drift(topologies=("fig8", "tpu-2pod-512")) -> list[dict]:
+    rows = []
+    for tname in topologies:
+        make, nbytes, _ = SCENARIOS[tname]
+        topo = make()
+        pairs = D.representative_pairs(topo)
+        drifted = Topology(topo.coords, [
+            Level(topo.levels[0].name, topo.levels[0].latency * 3,
+                  topo.levels[0].bandwidth / 3, topo.levels[0].overhead)
+        ] + list(topo.levels[1:]))
+        comm = Communicator(topo, policy="auto", backend="sim")
+        _run(comm, "bcast", nbytes)
+        probes = D.targeted_probes(drifted, pairs)
+        w0 = time.perf_counter()
+        rep = comm.refresh(probes)
+        refresh_wall = time.perf_counter() - w0
+        rows.append({
+            "topology": tname, "nprocs": topo.nprocs,
+            "targeted_pairs": len(pairs),
+            "all_pairs": topo.nprocs * (topo.nprocs - 1),
+            "probe_savings": 1.0 - len(pairs) / (topo.nprocs
+                                                 * (topo.nprocs - 1)),
+            "refreshed": rep.refreshed,
+            "worst_drift": rep.worst,
+            "refresh_wall_s": refresh_wall,
+        })
+    return rows
+
+
+def summarize(rec_rows, drift_rows) -> list[str]:
+    out = []
+    for tname in sorted({r["topology"] for r in rec_rows}):
+        worst = max(r["regret"] for r in rec_rows if r["topology"] == tname)
+        wall = max(r["repair_wall_s"] for r in rec_rows
+                   if r["topology"] == tname)
+        out.append(f"{tname}: worst post-repair regret {worst * 100:.2f}%, "
+                   f"repair wall time <= {wall * 1e3:.2f} ms")
+    for r in drift_rows:
+        out.append(f"{r['topology']}: drift re-probe {r['targeted_pairs']} "
+                   f"pairs vs {r['all_pairs']} all-pairs "
+                   f"({r['probe_savings'] * 100:.1f}% fewer)")
+    return out
+
+
+def build_doc(smoke: bool = False) -> dict:
+    names = ("fig8",) if smoke else ("fig8", "tpu-2pod-512")
+    rec = recovery(names)
+    dri = drift(names)
+    return {
+        "generated_by": "benchmarks/bench_elastic.py",
+        "policy": "paper",
+        "recovery": rec,
+        "drift": dri,
+        "summary": summarize(rec, dri),
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_elastic.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_elastic.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_elastic.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_elastic.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

@@ -16,25 +16,32 @@ The heavier device modules (:mod:`repro.core.collectives`,
 simulator-only use.
 """
 from .communicator import (BACKENDS, CacheInfo, Communicator, OPS, OpSpec,
-                           Plan, PlanChoice, SimResult, register_op,
+                           Plan, PlanCache, PlanChoice, RefreshReport,
+                           RepairReport, SimResult, register_op,
                            select_plan, select_tree, size_bucket)
-from .discovery import (ProbeSet, cluster_probes, device_probes, discover,
-                        environment_topology, fit_levels, fit_topology,
-                        simulated_probes)
+from .discovery import (ProbeSet, TargetedProbes, cluster_probes,
+                        device_probes, discover, environment_topology,
+                        fit_levels, fit_topology, measure_drift,
+                        refit_levels, representative_pairs,
+                        simulated_probes, targeted_probes)
 from .rounds import Lowered, SegSend
 from .topology import (Level, Topology, flat_view, magpie_machine_view,
                        magpie_site_view, paper_fig8_topology,
                        tpu_v5e_multipod)
 from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
                     binomial_tree, build_multilevel_tree, chain_tree,
-                    flat_tree, postal_tree)
+                    flat_tree, postal_tree, repair_tree)
 
 __all__ = [
     # the front door
-    "Communicator", "Plan", "PlanChoice", "SimResult", "CacheInfo",
+    "Communicator", "Plan", "PlanCache", "PlanChoice", "SimResult",
+    "CacheInfo", "RepairReport", "RefreshReport",
     # topology discovery (probe -> cluster -> fit)
     "ProbeSet", "simulated_probes", "environment_topology", "device_probes",
     "cluster_probes", "fit_levels", "fit_topology", "discover",
+    # elastic refresh (targeted re-probe -> drift -> refit)
+    "TargetedProbes", "representative_pairs", "targeted_probes",
+    "measure_drift", "refit_levels",
     # the rounds IR (select -> lower -> execute)
     "Lowered", "SegSend",
     # op dispatch
@@ -46,5 +53,5 @@ __all__ = [
     # trees & policies
     "Tree", "LevelPolicy", "PAPER_POLICY", "adaptive_policy",
     "binomial_tree", "build_multilevel_tree", "chain_tree", "flat_tree",
-    "postal_tree",
+    "postal_tree", "repair_tree",
 ]

@@ -40,6 +40,7 @@ __all__ = [
     "flat_psum",
     "multilevel_psum",
     "multilevel_psum_tree",
+    "compress_ef_zeros",
     "flatten_tree",
     "unflatten_tree",
 ]
@@ -55,23 +56,46 @@ def multilevel_psum(
     slow_axis: str | None,
     fast_axes: Sequence[str],
     compress_slow: bool = False,
-) -> jax.Array:
+    ef: jax.Array | None = None,
+):
     """Multilevel all-reduce of a 1-D buffer whose length divides the product
     of ``fast_axes`` sizes.  reduce-scatter intra-pod, (optionally int8-
     compressed) exchange across pods, all-gather intra-pod.
+
+    ``ef`` is the error-feedback residual for the compressed slow hop: it
+    must match the post-reduce-scatter shard (see :func:`compress_ef_zeros`)
+    and makes the call return ``(result, new_ef)``.  Passing it through the
+    uncompressed path returns it unchanged, so callers can thread one
+    residual buffer regardless of mode.
     """
     if x.ndim != 1:
         raise ValueError("multilevel_psum operates on flat 1-D buffers")
     for ax in fast_axes:
         x = lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+    new_ef = ef
     if slow_axis is not None:
-        if compress_slow:
+        if compress_slow and ef is not None:
+            x, new_ef = compression.compressed_psum(x, slow_axis, ef=ef)
+        elif compress_slow:
             x = compression.compressed_psum(x, slow_axis)
         else:
             x = lax.psum(x, slow_axis)
     for ax in reversed(fast_axes):
         x = lax.all_gather(x, ax, axis=0, tiled=True)
-    return x
+    return x if ef is None else (x, new_ef)
+
+
+def compress_ef_zeros(grads: Any, fast_degree: int) -> jax.Array:
+    """Zero-initialised error-feedback residual for
+    ``multilevel_psum_tree(..., mode="multilevel_compress", ef=...)``:
+    shaped like the post-reduce-scatter shard of the fused flat buffer
+    (total padded leaf count divided by the fast-axis degree).  This is
+    the PER-RANK shard; residuals diverge across dp ranks, so when
+    entering ``shard_map`` from the outside, tile it by the dp degree and
+    shard it over ``(slow, *fast)``."""
+    total = sum(int(l.size) for l in jax.tree.leaves(grads))
+    padded = total + (-total) % max(fast_degree, 1)
+    return jnp.zeros((padded // max(fast_degree, 1),), jnp.float32)
 
 
 # ---------------------------------------------------------------------- #
@@ -110,13 +134,18 @@ def multilevel_psum_tree(
     fast_axes: Sequence[str],
     mode: str = "multilevel",
     mean_over: int | None = None,
+    ef: jax.Array | None = None,
 ) -> Any:
     """All-reduce a gradient pytree across (slow_axis, *fast_axes).
 
     mode: "flat" | "multilevel" | "multilevel_compress".
     ``mean_over``: divide by this count (global DP degree) when averaging.
+    ``ef``: error-feedback residual for the compressed mode (see
+    :func:`compress_ef_zeros`); when given the call returns
+    ``(grads, new_ef)`` and the residual must be threaded to the next step.
     """
     axes = ([slow_axis] if slow_axis else []) + list(fast_axes)
+    new_ef = ef
     if mode == "flat":
         out = jax.tree.map(lambda g: lax.psum(g, tuple(axes)), grads)
     else:
@@ -127,9 +156,11 @@ def multilevel_psum_tree(
         flat, spec = flatten_tree(grads, pad_mult)
         flat = multilevel_psum(
             flat, slow_axis, fast_axes,
-            compress_slow=(mode == "multilevel_compress"),
+            compress_slow=(mode == "multilevel_compress"), ef=ef,
         )
+        if ef is not None:
+            flat, new_ef = flat
         out = unflatten_tree(flat, spec)
     if mean_over:
         out = jax.tree.map(lambda g: g / mean_over, out)
-    return out
+    return out if ef is None else (out, new_ef)

@@ -47,7 +47,7 @@ from . import schedule as S
 from .simulator import simulate, simulate_rounds
 from .topology import Topology
 from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
-                    binomial_tree, build_multilevel_tree)
+                    binomial_tree, build_multilevel_tree, repair_tree)
 
 __all__ = [
     "OpSpec",
@@ -60,6 +60,8 @@ __all__ = [
     "Plan",
     "PlanCache",
     "CacheInfo",
+    "RepairReport",
+    "RefreshReport",
     "SimResult",
     "Communicator",
     "BACKENDS",
@@ -309,7 +311,8 @@ class Plan:
     the per-rank timed rounds every backend consumes."""
 
     __slots__ = ("spec", "root", "tree", "algorithm", "segment", "_topo",
-                 "_members", "_schedules", "_lowered", "_rounds")
+                 "_members", "_schedules", "_lowered", "_rounds",
+                 "max_nbytes")
 
     def __init__(self, spec: OpSpec, root: int, tree: Tree,
                  topo: Topology | None = None,
@@ -326,6 +329,9 @@ class Plan:
         self._schedules: dict[float, S.Schedule] = {}
         self._lowered: dict[float, R.Lowered] = {}
         self._rounds: list[list[tuple[int, int]]] | None = None
+        # largest size this plan ever served — survives the bounded memo
+        # clears below; repair() splices at this scale
+        self.max_nbytes = 0.0
 
     @property
     def op(self) -> str:
@@ -333,6 +339,7 @@ class Plan:
 
     def schedule(self, nbytes: float = 0.0) -> S.Schedule:
         key = float(nbytes or 0.0)
+        self.max_nbytes = max(self.max_nbytes, key)
         if key not in self._schedules:
             if len(self._schedules) >= 16:  # bound the per-size memo
                 self._schedules.clear()
@@ -349,6 +356,7 @@ class Plan:
             raise ValueError("plan was built without a topology; "
                              "cannot lower")
         key = float(nbytes or 0.0)
+        self.max_nbytes = max(self.max_nbytes, key)
         if key not in self._lowered:
             if len(self._lowered) >= 16:  # bound the per-size memo
                 self._lowered.clear()
@@ -375,8 +383,38 @@ CacheInfo = collections.namedtuple(
     "CacheInfo", ["hits", "misses", "currsize", "maxsize", "tree_builds"])
 
 
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """Outcome of one :meth:`Communicator.repair` call.
+
+    ``repaired`` plans had their trees spliced in place (no tree rebuild);
+    ``evicted`` plans were dropped and will re-plan lazily (dead root, or a
+    leaf-group algorithm whose lowering is membership-shaped); ``kept``
+    entries did not intersect the failed ranks and were untouched.
+    """
+
+    failed: tuple[int, ...]
+    members: tuple[int, ...]
+    repaired: int
+    evicted: int
+    kept: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshReport:
+    """Outcome of one :meth:`Communicator.refresh` call.  ``drift`` maps
+    link-class index -> the measured/modeled time ratio deviating most
+    from 1.0 across both probe sizes (see
+    :func:`repro.core.discovery.measure_drift`); ``worst`` is the largest
+    |ratio - 1|."""
+
+    refreshed: bool
+    drift: dict[int, float]
+    worst: float
+
+
 class PlanCache:
-    """Tiny LRU keyed by (op, root, size-bucket, members)."""
+    """Tiny LRU keyed by (op, root, size-bucket, members, policy)."""
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
@@ -402,6 +440,28 @@ class PlanCache:
     def clear(self) -> None:
         self._d.clear()
         self.hits = self.misses = 0
+
+    # -- surgical access (elastic repair) ------------------------------- #
+    def items(self) -> list[tuple[Any, Plan]]:
+        """Snapshot of (key, plan) entries in LRU order, oldest first."""
+        return list(self._d.items())
+
+    def pop(self, key) -> Plan | None:
+        """Drop one entry (stats untouched); None when absent."""
+        return self._d.pop(key, None)
+
+    def put(self, key, plan: Plan) -> None:
+        """Insert/overwrite an entry directly — used to re-key repaired
+        plans; counts as neither hit nor miss."""
+        self._d[key] = plan
+        self._d.move_to_end(key)
+        if len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def invalidate(self) -> None:
+        """Drop every entry but keep hit/miss statistics (unlike
+        :meth:`clear`) — used when topology refresh voids all plans."""
+        self._d.clear()
 
 
 # ---------------------------------------------------------------------- #
@@ -680,12 +740,7 @@ class Communicator:
         self.slow_axis = slow_axis
         self.fast_axes = tuple(fast_axes)
         self.tree_builds = 0
-        # only these policies (or a searched algorithm) choose a different
-        # plan per size octave; for the rest, one plan per (op, root) serves
-        # every message size, so plan() inspection and execution always
-        # share a cache entry
-        self._size_dependent = (policy in ("adaptive", "auto", "best")
-                                or algorithm == "auto")
+        self.repairs = 0
         self._cache = PlanCache(cache_size)
         try:
             backend_cls = BACKENDS[backend]
@@ -724,22 +779,35 @@ class Communicator:
         return cls(topo, **kwargs)
 
     # -- planning -------------------------------------------------------- #
+    def _size_dependent(self, policy) -> bool:
+        """Only searching/adaptive policies (or a searched algorithm)
+        choose a different plan per size octave; for the rest, one plan per
+        (op, root) serves every message size, so plan() inspection and
+        execution always share a cache entry."""
+        return (policy in ("adaptive", "auto", "best")
+                or self.algorithm == "auto")
+
     def plan(self, op: str, *, root: int | None = None,
-             nbytes: float = 0.0) -> Plan:
+             nbytes: float = 0.0, policy: Any = None) -> Plan:
         """The (cached) plan for one collective.  Key: (op, root,
-        size-bucket, members) — a second identical call re-runs nothing."""
+        size-bucket, members, policy) — a second identical call re-runs
+        nothing, and a per-call ``policy=`` override can never be served a
+        plan built under a different policy (the override is part of the
+        key, not just the build closure)."""
         spec = OPS[op]  # KeyError on unknown op is the dispatch contract
         root = self.members[0] if root is None else root
         if root not in self.members:
             raise ValueError(f"root {root} is not a member")
-        bucket = (size_bucket(nbytes) if self._size_dependent and spec.sized
-                  else -1)
-        key = (op, root, bucket, self.members)
+        policy = self.policy if policy is None else policy
+        bucket = (size_bucket(nbytes)
+                  if self._size_dependent(policy) and spec.sized else -1)
+        # str policies and LevelPolicy (frozen, tuple field) are hashable
+        key = (op, root, bucket, self.members, policy)
 
         def build() -> Plan:
             choice = select_plan(self.topo, root, op, nbytes,
                                  members=self.members,
-                                 policy=self.policy, view=self.view,
+                                 policy=policy, view=self.view,
                                  algorithm=self.algorithm,
                                  segment_bytes=self.segment_bytes)
             self.tree_builds += choice.n_built
@@ -759,6 +827,114 @@ class Communicator:
     def clear_cache(self) -> None:
         self._cache.clear()
         self.tree_builds = 0
+
+    # -- elasticity: survive failures without a full re-plan ------------- #
+    def has_quorum(self, failed: Sequence[int], quorum: float = 0.5) -> bool:
+        """True when removing ``failed`` leaves strictly more than
+        ``quorum`` of the current membership — the threshold below which
+        callers should fall back to checkpoint-restart instead of
+        :meth:`repair`.  The rule itself lives in ONE place
+        (:func:`repro.runtime.fault_tolerance.has_quorum`; imported lazily
+        so the core package keeps no load-time runtime dependency)."""
+        from repro.runtime.fault_tolerance import has_quorum
+
+        dead = set(failed) & set(self.members)
+        return has_quorum(len(self.members), len(dead), quorum)
+
+    def repair(self, failed: Sequence[int]) -> RepairReport:
+        """Remove failed ranks and repair the plan cache IN PLACE.
+
+        Every cached plan whose member set intersects ``failed`` is either
+        *repaired* — its tree spliced by :func:`~repro.core.trees.repair_tree`
+        (orphans reparent onto the cheapest surviving attach point; no tree
+        is rebuilt, so ``tree_builds`` does not move) and re-keyed under the
+        surviving membership — or *evicted* when it cannot be spliced (its
+        root died, or it runs a leaf-group algorithm such as sag/rsag whose
+        lowering is shaped by membership) and re-plans lazily on next use.
+        Entries whose member sets do not intersect the failed ranks are
+        untouched.
+        """
+        dead = set(failed) & set(self.members)
+        survivors = tuple(m for m in self.members if m not in dead)
+        if not survivors:
+            raise ValueError("repair would leave no members")
+        repaired = evicted = kept = 0
+        for key, plan in self._cache.items():
+            op, root, bucket, key_members, pol = key
+            if not set(key_members) & dead:
+                kept += 1
+                continue
+            self._cache.pop(key)
+            if root in dead or plan.algorithm != "tree":
+                evicted += 1
+                continue
+            new_members = tuple(m for m in key_members if m not in dead)
+            build_topo = self.view if self.view is not None else self.topo
+            # splice at the plan's largest executed size (1 MiB floor):
+            # the repair cost model must weigh bandwidth, not just
+            # latency — repairing too small serializes large transfers,
+            # while repairing too large is measurably harmless
+            nb = max(plan.max_nbytes, float(1 << 20))
+            try:
+                tree = repair_tree(plan.tree, build_topo, dead, nbytes=nb)
+            except ValueError:
+                evicted += 1
+                continue
+            new_plan = Plan(plan.spec, root, tree, topo=build_topo,
+                            members=new_members, algorithm="tree",
+                            segment=plan.segment)
+            # a later repair (before any intervening collective) must
+            # still splice at the true traffic scale
+            new_plan.max_nbytes = plan.max_nbytes
+            self._cache.put((op, root, bucket, new_members, pol), new_plan)
+            repaired += 1
+        self.members = survivors
+        if dead:
+            self.repairs += 1
+        return RepairReport(tuple(sorted(dead)), survivors,
+                            repaired, evicted, kept)
+
+    def refresh(self, probes, *, threshold: float = 0.1) -> RefreshReport:
+        """Fold a targeted drift re-probe into the communicator.
+
+        ``probes`` is a :class:`repro.core.discovery.TargetedProbes` taken
+        at :func:`~repro.core.discovery.representative_pairs` of this
+        topology — O(strata · group-count) measurements, not the O(P²) of
+        full discovery.  When any link class has drifted by more than
+        ``threshold`` (worst measured/modeled time ratio over both probe
+        sizes), the level parameters are refitted (coordinates — i.e.
+        membership and grouping — are untouched) and all cached plans are
+        invalidated so the next call re-runs the argmin under the fresh
+        costs.  Probe pairs touching non-members (e.g. ranks removed by an
+        earlier :meth:`repair` when the pair list was built from the full
+        topology) are ignored.
+        """
+        from . import discovery as D
+
+        if self.view is not None:
+            # a view's Level objects were copied at construction from an
+            # unknown transform (collapse/flat) of some topology; refitting
+            # self.topo alone would leave tree construction on stale costs
+            # while claiming success
+            raise ValueError(
+                "refresh is not supported on a view-based communicator; "
+                "rebuild the view from the refitted topology instead")
+        members = set(self.members)
+        if any(p not in members or q not in members
+               for p, q, _ in probes.pairs):
+            keep = [i for i, (p, q, _) in enumerate(probes.pairs)
+                    if p in members and q in members]
+            probes = D.TargetedProbes(
+                tuple(probes.pairs[i] for i in keep), probes.sizes,
+                probes.times[keep],
+                None if probes.inject is None else probes.inject[keep])
+        drift = D.measure_drift(self.topo, probes)
+        worst = max((abs(r - 1.0) for r in drift.values()), default=0.0)
+        if worst <= threshold:
+            return RefreshReport(False, drift, worst)
+        self.topo = D.refit_levels(self.topo, probes)
+        self._cache.invalidate()  # stale costs; stats/counters stay
+        return RefreshReport(True, drift, worst)
 
     # -- the seven collectives -------------------------------------------- #
     def bcast(self, x, *, root: int = 0):
@@ -791,14 +967,21 @@ class Communicator:
         return self.backend.run(op, plan, x, root)
 
     def allreduce_tree(self, grads, *, mode: str = "multilevel",
-                       mean_over: int | None = None):
+                       mean_over: int | None = None, ef=None):
         """All-reduce a gradient pytree (jax backend only): fuses all leaves
-        into one flat buffer per level — see collectives.multilevel_psum_tree."""
+        into one flat buffer per level — see collectives.multilevel_psum_tree.
+
+        ``ef`` is the error-feedback residual for
+        ``mode="multilevel_compress"`` (build it once with
+        :func:`~repro.core.collectives.compress_ef_zeros`); when given the
+        call returns ``(grads, new_ef)`` and the residual must be carried
+        to the next step — without it the int8 rounding bias accumulates
+        across steps."""
         if not isinstance(self.backend, JaxBackend):
             raise ValueError("allreduce_tree requires backend='jax'")
         from .collectives import multilevel_psum_tree
         return multilevel_psum_tree(grads, self.slow_axis, self.fast_axes,
-                                    mode=mode, mean_over=mean_over)
+                                    mode=mode, mean_over=mean_over, ef=ef)
 
     # -- introspection ----------------------------------------------------- #
     def _nbytes_of(self, op: str, x) -> float:

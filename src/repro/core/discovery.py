@@ -45,6 +45,7 @@ from .topology import Level, Topology, level_matrix
 
 __all__ = [
     "ProbeSet",
+    "TargetedProbes",
     "DEFAULT_PROBE_SIZES",
     "DEFAULT_GAP_FACTOR",
     "simulated_probes",
@@ -54,6 +55,10 @@ __all__ = [
     "fit_levels",
     "fit_topology",
     "discover",
+    "representative_pairs",
+    "targeted_probes",
+    "refit_levels",
+    "measure_drift",
 ]
 
 
@@ -399,6 +404,162 @@ def fit_topology(probes: ProbeSet, *,
     """The full pipeline: probes → strata → fitted levels → Topology."""
     coords = cluster_probes(probes, gap_factor=gap_factor)
     return Topology(coords, fit_levels(probes, coords))
+
+
+# ---------------------------------------------------------------------- #
+# Targeted drift re-probing: O(strata · group-count) instead of O(P²).
+#
+# Full discovery measures every pair because it must *find* the strata.
+# Once a topology is known, checking whether its link classes still match
+# the network only needs a handful of representative pairs — one per
+# adjacent sibling-group pair per stratum, one inside each leaf group.
+# This is the cheap refresh Estefanel & Mounié's Fast-Tuning loop calls
+# for: re-measure in O(strata · group-count), refit levels, re-select.
+# ---------------------------------------------------------------------- #
+
+def representative_pairs(topo: Topology,
+                         members: Sequence[int] | None = None,
+                         ) -> list[tuple[int, int, int]]:
+    """Sample pairs ``(p, q, level)`` covering every link class of ``topo``.
+
+    For stratum ``l`` the groups under each common parent path are chained
+    in member order and one representative pair is emitted per adjacent
+    group pair — enough to refit that class, without the quadratic
+    all-pairs sweep.  The finest class gets one intra-leaf-group pair per
+    (non-singleton) leaf group.  Total count is at most
+    ``(nstrata + 1) · (number of leaf groups)``.
+    """
+    members = (list(range(topo.nprocs)) if members is None
+               else list(members))
+    pairs: list[tuple[int, int, int]] = []
+    for l in range(topo.nstrata):
+        by_parent: dict[tuple, dict[int, int]] = {}
+        for m in members:
+            path = tuple(topo.coords[m, :l])
+            gid = int(topo.coords[m, l])
+            by_parent.setdefault(path, {}).setdefault(gid, m)
+        for reps in by_parent.values():
+            chain = list(reps.values())
+            pairs.extend((a, b, l) for a, b in zip(chain, chain[1:]))
+    leaf: dict[tuple, list[int]] = {}
+    for m in members:
+        leaf.setdefault(tuple(topo.coords[m]), []).append(m)
+    pairs.extend((g[0], g[1], topo.nstrata)
+                 for g in leaf.values() if len(g) >= 2)
+    return pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetedProbes:
+    """Point-to-point measurements at selected pairs only.
+
+    pairs  : ``(p, q, level)`` triples — ``level`` is the link class the
+             *model* topology assigns the pair (what the refit groups by).
+    sizes  : the two probe payloads, bytes, ascending.
+    times  : (n, 2) one-way delivery seconds per pair and size.
+    inject : optional (n,) sender occupancy at ``sizes[0]`` (separates
+             overhead from latency, as in :class:`ProbeSet`).
+    """
+
+    pairs: tuple[tuple[int, int, int], ...]
+    sizes: tuple[float, float]
+    times: np.ndarray
+    inject: np.ndarray | None = None
+
+    def __post_init__(self):
+        t = np.asarray(self.times, dtype=float)
+        if t.shape != (len(self.pairs), 2):
+            raise ValueError(
+                f"times must be ({len(self.pairs)}, 2), got {t.shape}")
+        if self.sizes[0] >= self.sizes[1]:
+            raise ValueError("probe sizes must be ascending")
+        object.__setattr__(self, "times", t)
+        object.__setattr__(self, "pairs", tuple(map(tuple, self.pairs)))
+        if self.inject is not None:
+            inj = np.asarray(self.inject, dtype=float)
+            if inj.shape != (len(self.pairs),):
+                raise ValueError(
+                    f"inject must be ({len(self.pairs)},), got {inj.shape}")
+            object.__setattr__(self, "inject", inj)
+
+
+def targeted_probes(truth: Topology,
+                    pairs: Sequence[tuple[int, int, int]], *,
+                    noise: float = 0.0, seed: int = 0,
+                    sizes: Sequence[float] = DEFAULT_PROBE_SIZES,
+                    ) -> TargetedProbes:
+    """Sample the postal model of ``truth`` at ``pairs`` only.
+
+    The simulation analogue of pinging just the representative pairs: each
+    sample is ``overhead + latency + nbytes/bandwidth`` on the TRUE link
+    class of (p, q), under multiplicative noise — the pair's *model* level
+    tag rides along untouched so :func:`refit_levels` can group by it.
+    """
+    if not 0.0 <= noise < 1.0:
+        raise ValueError(f"noise must be in [0, 1), got {noise}")
+    s1, s2 = float(sizes[0]), float(sizes[1])
+    rng = np.random.default_rng(seed)
+    n = len(pairs)
+    lvls = [truth.level_of_edge(p, q) for p, q, _ in pairs]
+    lat = np.array([l.latency for l in lvls])
+    bw = np.array([l.bandwidth for l in lvls])
+    ovh = np.array([l.overhead for l in lvls])
+
+    def jitter():
+        return 1.0 + noise * rng.uniform(-1.0, 1.0, n) if noise else 1.0
+
+    times = np.stack([(ovh + lat + s / bw) * jitter() for s in (s1, s2)],
+                     axis=1)
+    inject = (ovh + s1 / bw) * jitter()
+    return TargetedProbes(tuple(pairs), (s1, s2), times, inject)
+
+
+def refit_levels(topo: Topology, probes: TargetedProbes) -> Topology:
+    """Refit ``topo``'s link classes from a targeted probe set.
+
+    Coordinates (membership, grouping) are untouched — only the per-class
+    postal parameters move, via the same two-point affine fit as
+    :func:`fit_levels`.  A class with no sample pairs keeps its previous
+    parameters.  Returns a new :class:`Topology`.
+    """
+    s1, s2 = probes.sizes
+    levels = []
+    for l, old in enumerate(topo.levels):
+        idx = [i for i, (_, _, pl) in enumerate(probes.pairs) if pl == l]
+        if not idx:
+            levels.append(old)
+            continue
+        t1 = float(probes.times[idx, 0].mean())
+        t2 = float(probes.times[idx, 1].mean())
+        slope = max((t2 - t1) / (s2 - s1), 1e-30)
+        intercept = ((t1 - s1 * slope) + (t2 - s2 * slope)) / 2.0
+        overhead = old.overhead
+        if probes.inject is not None:
+            overhead = max(
+                float(probes.inject[idx].mean()) - s1 * slope, 0.0)
+        levels.append(Level(old.name, max(intercept - overhead, 0.0),
+                            1.0 / slope, overhead))
+    return Topology(topo.coords, levels)
+
+
+def measure_drift(topo: Topology, probes: TargetedProbes) -> dict[int, float]:
+    """Per link class: the measured / modeled one-way time ratio that
+    deviates most from 1.0 across BOTH probe sizes — the small probe is
+    latency-dominated and the large one bandwidth-dominated, so either
+    parameter drifting alone is visible (latency drift on a fat link
+    barely moves the large-probe ratio).  1.0 means the class still
+    matches the model; the deviation is what
+    :meth:`repro.core.Communicator.refresh` thresholds."""
+    out: dict[int, float] = {}
+    for l, lvl in enumerate(topo.levels):
+        idx = [i for i, (_, _, pl) in enumerate(probes.pairs) if pl == l]
+        if not idx:
+            continue
+        ratios = [float(probes.times[idx, k].mean())
+                  / (lvl.overhead + lvl.latency + s / lvl.bandwidth)
+                  for k, s in enumerate(probes.sizes)]
+        out[l] = max(ratios, key=lambda r: abs(r - 1.0))
+    return out
 
 
 # ---------------------------------------------------------------------- #

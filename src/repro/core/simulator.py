@@ -29,6 +29,8 @@ Two executors:
 """
 from __future__ import annotations
 
+import math
+
 from .schedule import Direction, Schedule
 from .topology import Topology
 
@@ -110,8 +112,9 @@ def _run_up(phase, topo: Topology, prev: dict[int, float]) -> dict[int, float]:
 # The rounds-IR executor.
 # ---------------------------------------------------------------------- #
 
-def simulate_rounds(lowered, topo: Topology,
-                    start: float = 0.0) -> dict[int, float]:
+def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
+                    fail_at: dict[int, float] | None = None,
+                    ) -> dict[int, float]:
     """Execute a :class:`~repro.core.rounds.Lowered` program on ``topo``.
 
     One linear pass: the send list is topologically ordered and each rank's
@@ -119,7 +122,16 @@ def simulate_rounds(lowered, topo: Topology,
     delivery, sender NIC, receiver fold occupancy) is already known when a
     send is reached.  Returns per-rank completion times over
     ``lowered.members``.
+
+    ``fail_at`` injects failures: ``{rank: death_time}``.  A send is LOST
+    when any dependency was lost, the sender dies before finishing its
+    injection, or the receiver dies before arrival.  A surviving rank
+    blocked on lost data reports ``math.inf`` — the signature a failure
+    detector observes; dead ranks report their death time.  With
+    ``fail_at`` empty/None the timing is bit-identical to the fault-free
+    path.
     """
+    death = fail_at or {}
     sender_free: dict[int, float] = {}
     recv_free: dict[int, float] = {}
     delivered: list[float] = []
@@ -131,8 +143,32 @@ def simulate_rounds(lowered, topo: Topology,
                  *(delivered[d] for d in snd.deps)) if snd.deps else \
             max(start, sender_free.get(snd.src, start))
         xfer = snd.nbytes / lvl.bandwidth
-        sender_free[snd.src] = t0 + xfer + (lvl.overhead if snd.first else 0.0)
+        inject_end = t0 + xfer + (lvl.overhead if snd.first else 0.0)
         arrival = t0 + xfer + (lvl.latency if snd.first else 0.0)
+        if death and (t0 == math.inf
+                      or inject_end > death.get(snd.src, math.inf)
+                      or arrival > death.get(snd.dst, math.inf)):
+            # lost: deps never delivered, sender died mid-injection, or
+            # receiver died before arrival.  A live sender blocked on lost
+            # data waits forever; downstream consumers inherit the loss.
+            delivered.append(math.inf)
+            if snd.src not in death:
+                if t0 == math.inf:
+                    completion[snd.src] = math.inf
+                else:  # injected into a dead peer: the NIC time is real
+                    sender_free[snd.src] = inject_end
+                    completion[snd.src] = max(completion[snd.src],
+                                              inject_end)
+            elif t0 == math.inf or inject_end > death[snd.src]:
+                # the dying rank's NIC never frees: its LATER queued sends
+                # must not jump the FIFO and get spuriously delivered
+                sender_free[snd.src] = math.inf
+            else:  # lost to the receiver's death; sender still alive here
+                sender_free[snd.src] = inject_end
+            if snd.dst not in death:
+                completion[snd.dst] = math.inf
+            continue
+        sender_free[snd.src] = inject_end
         if snd.kind == "reduce":
             # folds drain sequentially at the receiver (postal occupancy)
             done = max(arrival, recv_free.get(snd.dst, start)) + lvl.overhead
@@ -142,6 +178,9 @@ def simulate_rounds(lowered, topo: Topology,
         delivered.append(done)
         completion[snd.src] = max(completion[snd.src], sender_free[snd.src])
         completion[snd.dst] = max(completion[snd.dst], done)
+    for r, t in death.items():
+        if r in completion:
+            completion[r] = min(completion[r], t)
     return completion
 
 

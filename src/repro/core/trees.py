@@ -25,6 +25,7 @@ __all__ = [
     "chain_tree",
     "postal_tree",
     "build_multilevel_tree",
+    "repair_tree",
     "LevelPolicy",
     "PAPER_POLICY",
 ]
@@ -312,3 +313,116 @@ def build_multilevel_tree(
     tree = rec(root, members, 0)
     tree.validate()
     return tree
+
+
+# ---------------------------------------------------------------------- #
+# Elastic repair: splice failed ranks out of an existing tree.
+# ---------------------------------------------------------------------- #
+
+def repair_tree(tree: Tree, topo: Topology, failed, nbytes: float = 0.0) -> Tree:
+    """Remove ``failed`` ranks from ``tree`` without rebuilding it.
+
+    Dead nodes are spliced out in preorder (dead ancestors before their
+    dead descendants).  At each splice the dead node's *deputy* — the
+    surviving child sharing its finest stratum (a dead coordinator's
+    stand-in from its own group), ties broken by cheapest edge to the
+    parent — is promoted into the dead node's exact service slot, so the
+    repaired tree keeps the same slow-link structure the builder would
+    choose from scratch.  The remaining orphaned subtrees reparent onto
+    the cheapest surviving attach point under the postal cost model —
+    estimated payload *arrival* at the orphan: the candidate's own
+    root-to-node path time, plus the injection occupancy of the children
+    the candidate serves first, plus the new edge's transfer.  Pricing
+    arrivals (not just edges) balances width against depth: it spreads
+    equal-distance orphans across NICs and refuses to hang a large
+    subtree below an already-late node.  Candidates are the promoted
+    deputy, the lost parent's ancestor
+    chain, the surviving children of that chain (the orphan's "uncles" —
+    what lets it rejoin a same-stratum subtree instead of paying its own
+    slow crossing), and orphan siblings already re-attached in this
+    splice.  Children lists stay ordered so slower-level subtrees keep
+    being served first (Fig. 4's rule survives the splice).
+
+    Raises ``ValueError`` when the root itself failed (the plan's root is
+    semantic; the caller must re-plan) or when no member survives.
+    """
+    dead = set(failed) & set(tree.members())
+    if tree.root in dead:
+        raise ValueError(f"cannot repair: root {tree.root} failed")
+    children = {p: list(cs) for p, cs in tree.children.items()}
+    parent = {c: p for p, cs in children.items() for c in cs}
+    if not dead:
+        return Tree(tree.root, {p: cs for p, cs in children.items() if cs})
+
+    def occupy(a: int, upto_level: int) -> float:
+        """a's injection occupancy for the children served at or before a
+        new child of class ``upto_level`` (slow-first service order)."""
+        return sum(topo.levels[topo.comm_level(a, x)].occupy(nbytes)
+                   for x in children.get(a, [])
+                   if topo.comm_level(a, x) <= upto_level)
+
+    def est_ready(a: int) -> float:
+        """Postal estimate of when ``a`` holds the payload: queue + xfer
+        along its current root path (root is ready at 0)."""
+        path = [a]
+        while path[-1] in parent:
+            path.append(parent[path[-1]])
+        t = 0.0
+        for node, y in zip(path[::-1], path[-2::-1]):
+            lvl = topo.comm_level(node, y)
+            idx = children[node].index(y)
+            t += sum(topo.levels[topo.comm_level(node, x)].occupy(nbytes)
+                     for x in children[node][:idx])
+            t += topo.levels[lvl].xfer(nbytes)
+        return t
+
+    def cost(a: int, b: int) -> float:
+        """Estimated arrival of the payload at ``b`` if attached under
+        ``a`` (appended after a's same-or-slower-level children)."""
+        lvl = topo.comm_level(a, b)
+        return (est_ready(a) + occupy(a, lvl)
+                + topo.levels[lvl].xfer(nbytes))
+
+    for d in tree.members():  # preorder: parents before children
+        if d not in dead:
+            continue
+        # d's current parent (and its whole chain) is alive: dead original
+        # ancestors were spliced earlier in preorder, and re-attachment
+        # only ever targets live nodes
+        p, orphans = parent[d], children.pop(d, [])
+        slot = children[p].index(d)
+        children[p].pop(slot)
+        del parent[d]
+        chain = [p] + _ancestors(parent, p)
+        # uncles root subtrees disjoint from d's, so attaching an orphan
+        # (a subtree of d's) under one can never form a cycle
+        cands = chain + [c for a in chain for c in children.get(a, [])
+                         if c not in dead]
+        live = [c for c in orphans if c not in dead]
+        if live:
+            deputy = min(live, key=lambda c: (-topo.comm_level(d, c),
+                                              cost(p, c)))
+            orphans.remove(deputy)
+            children[p].insert(slot, deputy)
+            parent[deputy] = p
+            cands.insert(0, deputy)
+        for c in orphans:
+            best = min(cands, key=lambda a: cost(a, c))
+            lvl = topo.comm_level(best, c)
+            cs = children.setdefault(best, [])
+            pos = sum(1 for x in cs if topo.comm_level(best, x) <= lvl)
+            cs.insert(pos, c)
+            parent[c] = best
+            if c not in dead:  # a dead orphan is spliced on its own visit
+                cands.append(c)
+    out = Tree(tree.root, {p: cs for p, cs in children.items() if cs})
+    out.validate()
+    return out
+
+
+def _ancestors(parent: dict[int, int], n: int) -> list[int]:
+    out = []
+    while n in parent:
+        n = parent[n]
+        out.append(n)
+    return out

@@ -90,7 +90,10 @@ def flash_attention_fwd(
     G = H // Hkv
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    if Sq % block_q != 0 or Sk % block_k != 0:
+        raise ValueError(f"flash attention blocks must tile the "
+                         f"sequence: Sq={Sq} Sk={Sk} "
+                         f"block_q={block_q} block_k={block_k}")
     n_q, n_k = Sq // block_q, Sk // block_k
     scale = 1.0 / math.sqrt(hd)
 

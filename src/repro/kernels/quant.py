@@ -36,7 +36,9 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 def quantize_int8(x: jax.Array, *, interpret: bool = True):
     """x: 1-D f32, length divisible by QBLOCK*TILE (callers pad).
     Returns (q int8 [N], scales f32 [N/QBLOCK])."""
-    assert x.ndim == 1 and x.size % (QBLOCK * TILE) == 0, x.shape
+    if x.ndim != 1 or x.size % (QBLOCK * TILE) != 0:
+        raise ValueError(f"quantize_int8 needs a 1-D buffer divisible "
+                         f"by {QBLOCK * TILE}, got shape {x.shape}")
     nblk = x.size // QBLOCK
     xb = x.reshape(nblk, QBLOCK)
     grid = (nblk // TILE,)
@@ -55,7 +57,10 @@ def quantize_int8(x: jax.Array, *, interpret: bool = True):
 
 def dequantize_int8(q: jax.Array, scales: jax.Array, *,
                     interpret: bool = True) -> jax.Array:
-    assert q.ndim == 1 and q.size % (QBLOCK * TILE) == 0, q.shape
+    if q.ndim != 1 or q.size % (QBLOCK * TILE) != 0:
+        raise ValueError(f"dequantize_int8 needs a 1-D buffer "
+                         f"divisible by {QBLOCK * TILE}, got shape "
+                         f"{q.shape}")
     nblk = q.size // QBLOCK
     qb = q.reshape(nblk, QBLOCK)
     grid = (nblk // TILE,)

@@ -71,7 +71,9 @@ def wkv_chunked(r, k, v, w, u, *, chunk: int = CHUNK,
 
     S must divide by ``chunk`` (callers pad, as models.layers does)."""
     B, S, H, hd = r.shape
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(f"wkv_chunked needs S % chunk == 0, got "
+                         f"S={S} chunk={chunk}")
     n = S // chunk
 
     def fold(x):  # (B,S,H,hd) -> (B*H, S, hd)

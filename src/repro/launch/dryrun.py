@@ -85,8 +85,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         raw = STEP.make_train_fn(cfg, opt_cfg, mesh)
         p_sh, o_sh, b_sh = STEP.train_in_shardings(cfg, opt_cfg, mesh)
         aparams = STEP.abstract_params(cfg)
-        aopt = jax.eval_shape(lambda p: adamw.init_opt_state(p, opt_cfg),
-                              aparams)
+        aopt = jax.eval_shape(
+            lambda p: adamw.init_opt_state(
+                p, opt_cfg, n_slow=mesh.shape.get("pod", 1)), aparams)
         batch = input_specs(cfg, shape)
         fn = jax.jit(raw, donate_argnums=(0, 1),
                      in_shardings=(p_sh, o_sh,

@@ -80,9 +80,14 @@ def make_train_fn(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
 
     aparams = abstract_params(cfg)
     mdims = model_dims_of(aparams, model_size)
-    opt_specs = adamw.opt_manual_specs(aparams, opt_cfg, data_size, mdims)
+    opt_specs = adamw.opt_manual_specs(aparams, opt_cfg, data_size, mdims,
+                                       slow_axis=slow)
     pspecs = SH.param_pspecs(aparams, model_size)  # model-axis specs
     opt_inner = {"m": pspecs, "v": pspecs, "master": pspecs, "step": P()}
+    if opt_cfg.error_feedback:
+        # ef leaves carry a leading slow-axis dim ahead of the param dims
+        opt_inner["ef"] = jax.tree.map(lambda s: P(None, *s), pspecs,
+                                       is_leaf=lambda x: isinstance(x, P))
     model_axis = "model" if model_size > 1 else None
 
     def update(p_, g_, o_):
@@ -128,21 +133,32 @@ def train_in_shardings(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh):
     param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                             is_leaf=lambda x: isinstance(x, P))
 
-    if opt_cfg.sharded_state:
-        axes = adamw.scatter_axes(aparams, mesh.shape["data"], mdims)
+    axes = adamw.scatter_axes(aparams, mesh.shape["data"], mdims)
 
-        def combined(spec, ax, leaf):
+    def combined(spec, ax, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        if ax is not None and dims[ax] is None:
+            dims[ax] = "data"
+        return NamedSharding(mesh, P(*dims))
+
+    scattered = jax.tree.map(combined, pspecs, axes, aparams,
+                             is_leaf=lambda x: isinstance(x, P))
+    ms = scattered if opt_cfg.sharded_state else param_sh
+    opt_sh = {"m": ms, "v": ms, "master": ms,
+              "step": NamedSharding(mesh, P())}
+    if opt_cfg.error_feedback:
+        # per-(pod, data)-shard residual even in dense mode: leading dim
+        # over the slow axis, scatter dim over 'data'
+        slow = "pod" if "pod" in mesh.shape else None
+
+        def ef_sharding(spec, ax, leaf):
             dims = list(spec) + [None] * (leaf.ndim - len(spec))
             if ax is not None and dims[ax] is None:
                 dims[ax] = "data"
-            return NamedSharding(mesh, P(*dims))
+            return NamedSharding(mesh, P(slow, *dims))
 
-        ms = jax.tree.map(combined, pspecs, axes, aparams,
-                          is_leaf=lambda x: isinstance(x, P))
-    else:
-        ms = param_sh
-    opt_sh = {"m": ms, "v": ms, "master": ms,
-              "step": NamedSharding(mesh, P())}
+        opt_sh["ef"] = jax.tree.map(ef_sharding, pspecs, axes, aparams,
+                                    is_leaf=lambda x: isinstance(x, P))
     batch_sh = NamedSharding(mesh, SH.batch_pspec(mesh))
     return param_sh, opt_sh, batch_sh
 

@@ -29,7 +29,7 @@ from repro.launch.mesh import (make_test_mesh, make_production_mesh,
 from repro.models import transformer as T
 from repro.optim.adamw import OptConfig, init_opt_state
 from repro.runtime.fault_tolerance import (FailureInjector, StragglerMonitor,
-                                           plan_recovery)
+                                           plan_recovery, pod_member_ranks)
 
 
 def build_mesh(spec: str):
@@ -37,6 +37,40 @@ def build_mesh(spec: str):
         return make_production_mesh(multi_pod=True)
     pods, data, model = (int(x) for x in spec.split("x"))
     return make_test_mesh(pods, data, model)
+
+
+def _fit_ef(opt_tree: dict, lost_pods, new_pods: int) -> dict:
+    """Fit the EF residual's leading pod dim after an elastic mesh change:
+    surviving pods keep their own rows (their residuals are still the
+    rounding error of the shard they exchange); any other mismatch resets
+    to zeros (EF re-warms in one step)."""
+    if "ef" not in opt_tree:
+        return opt_tree
+    lost = set(lost_pods)
+
+    def fit(e):
+        if e.shape[0] == new_pods:
+            return e
+        keep = [p for p in range(e.shape[0]) if p not in lost]
+        if len(keep) == new_pods:
+            return np.asarray(e)[keep]
+        return np.zeros((new_pods,) + e.shape[1:], e.dtype)
+
+    return dict(opt_tree, ef=jax.tree.map(fit, opt_tree["ef"]))
+
+
+def _fit_batch(arr: np.ndarray, dp: int) -> np.ndarray:
+    """Fit a host batch to a (possibly shrunk) dp degree: drop the tail
+    rows that no longer tile (the lost pod's share — the straggler-drop
+    semantics, the mean renormalises), or wrap-pad tiny batches up."""
+    b = arr.shape[0]
+    n = (b // dp) * dp
+    if n == b:
+        return arr
+    if n == 0:
+        reps = -(-dp // b)
+        return np.concatenate([arr] * reps, axis=0)[:dp]
+    return arr[:n]
 
 
 def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
@@ -56,6 +90,14 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
     pipe = DataPipeline(cfg, shape)
     losses: list[float] = []
     recoveries = 0
+    repairs = 0
+
+    # the planning/estimation plane outlives mesh rebuilds: on an in-place
+    # recovery the SAME communicator is repaired (members shrink, cached
+    # plans splice out the dead ranks) instead of being re-created
+    from repro.core import Communicator
+    from repro.launch.mesh import dp_topology
+    sim = Communicator(dp_topology(mesh), policy="paper", backend="sim")
 
     def setup(mesh):
         # the single topology-aware entry point: gradient sync decomposes
@@ -63,9 +105,6 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
         mcomm = mesh_communicator(mesh, backend="jax")
         # estimate over the dp ranks only, with each model slice's share of
         # the gradient (the sync moves 1/model_size of the bytes per slice)
-        from repro.core import Communicator
-        from repro.launch.mesh import dp_topology
-        sim = Communicator(dp_topology(mesh), policy="paper", backend="sim")
         grad_bytes = 4 * sum(
             int(np.prod(l.shape)) for l in
             jax.tree.leaves(STEP.abstract_params(cfg)))
@@ -82,7 +121,8 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
     fn, p_sh, o_sh, b_sh = setup(mesh)
     params_host = jax.tree.map(np.asarray,
                                T.init_model(jax.random.PRNGKey(0), cfg))
-    opt_host = jax.tree.map(np.asarray, init_opt_state(params_host, opt_cfg))
+    opt_host = jax.tree.map(np.asarray, init_opt_state(
+        params_host, opt_cfg, n_slow=mesh.shape.get("pod", 1)))
 
     start = 0
     latest = ckpt.latest_step()
@@ -97,6 +137,7 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
 
     step_i = start
     accum = 1
+    orig_dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
     while step_i < steps:
         t0 = time.monotonic()
         # ---- failure injection / elastic recovery --------------------- #
@@ -104,36 +145,70 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
         if failed:
             plan = plan_recovery(tuple(mesh.shape.values()),
                                  tuple(mesh.shape.keys()), failed)
+            # current-mesh dp ranks of the lost pods, translated to the
+            # ORIGINAL rank ids the planning communicator still speaks
+            # (its members list is the order-preserved survivor list)
+            dead = [sim.members[r] for r in
+                    pod_member_ranks(plan.old_shape, plan.axis_names,
+                                     list(plan.lost_pods))
+                    if r < len(sim.members)]
+            in_place = plan.changed and sim.has_quorum(dead)
             print(f"[train] step {step_i}: pods {failed} failed -> "
                   f"mesh {plan.old_shape} -> {plan.new_shape}, "
-                  f"accum x{plan.accum_factor}")
-            recoveries += 1
-            # drop to the shrunk mesh, restore from the last durable ckpt
+                  f"accum x{plan.accum_factor} "
+                  f"({'in-place repair' if in_place else 'restart'})")
             if plan.changed and plan.new_shape[0] >= 1:
                 mesh = build_mesh("x".join(map(str, plan.new_shape))
                                   if len(plan.new_shape) == 3 else mesh_spec)
+                if in_place:
+                    rep = sim.repair(failed=dead)
+                    repairs += 1
+                    print(f"[train] repair: {rep.repaired} plan(s) spliced "
+                          f"in place, {rep.evicted} evicted, {rep.kept} "
+                          f"kept; {len(rep.members)} dp rank(s) remain")
+                else:
+                    # full restart: the old membership (and its rank
+                    # translation) is void — re-plan on the new mesh
+                    sim = Communicator(dp_topology(mesh), policy="paper",
+                                       backend="sim")
                 fn, p_sh, o_sh, b_sh = setup(mesh)
                 accum = plan.accum_factor
-            latest = ckpt.latest_step()
-            if latest is not None:
-                ckpt.wait()
-                state = ckpt.restore(latest,
-                                     {"params": params_host, "opt": opt_host})
-                params = jax.device_put(state["params"], p_sh)
-                opt = jax.device_put(state["opt"], o_sh)
-                step_i = latest + 1
-                continue
-            if plan.changed:
-                # no durable checkpoint yet: carry the live state onto the
-                # shrunk mesh (pull to host, re-place under new shardings)
+            # quorum held: carry the LIVE state onto the shrunk mesh — no
+            # checkpoint rewind, no step replay.  Below quorum: restore
+            # from the last durable checkpoint (live-carry only as the
+            # no-checkpoint-yet fallback).
+            carry_live = in_place
+            n_pods = mesh.shape.get("pod", 1)
+            if not in_place:
+                recoveries += 1
+                latest = ckpt.latest_step()
+                if latest is not None:
+                    ckpt.wait()
+                    state = ckpt.restore(
+                        latest, {"params": params_host, "opt": opt_host})
+                    params = jax.device_put(state["params"], p_sh)
+                    opt = jax.device_put(
+                        _fit_ef(state["opt"], plan.lost_pods, n_pods), o_sh)
+                    step_i = latest + 1
+                    continue
+                carry_live = plan.changed
+            if carry_live:
                 params = jax.device_put(jax.tree.map(np.asarray, params), p_sh)
-                opt = jax.device_put(jax.tree.map(np.asarray, opt), o_sh)
+                opt = jax.device_put(
+                    _fit_ef(jax.tree.map(np.asarray, opt),
+                            plan.lost_pods, n_pods), o_sh)
 
         # ---- the actual step (with grad accumulation on shrunk mesh) -- #
         loss_acc = 0.0
+        dp_deg = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
         for micro in range(accum):
             hb = pipe.host_batch(step_i * accum + micro)
-            gb = {k: jax.device_put(v, b_sh) for k, v in hb.items()}
+            # batch fitting is ELASTIC-only: a shrunk dp degree may stop
+            # tiling the configured batch; a healthy run keeps the loud
+            # device_put error on a misconfigured batch
+            fit = ((lambda v: _fit_batch(np.asarray(v), dp_deg))
+                   if dp_deg != orig_dp else np.asarray)
+            gb = {k: jax.device_put(fit(v), b_sh) for k, v in hb.items()}
             params, opt, loss = fn(params, opt, gb)
             loss_acc += float(loss)
         losses.append(loss_acc / accum)
@@ -153,6 +228,7 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
 
     ckpt.wait()
     return {"losses": losses, "recoveries": recoveries,
+            "repairs": repairs,
             "stragglers": len(straggler.dropped_steps),
             "final_loss": losses[-1] if losses else None}
 
@@ -176,7 +252,8 @@ def main() -> None:
                 args.comm, not args.no_zero1, args.ckpt_dir, args.ckpt_every,
                 smoke=not args.full_config)
     print(f"[train] done: final_loss={out['final_loss']:.4f} "
-          f"recoveries={out['recoveries']} stragglers={out['stragglers']}")
+          f"recoveries={out['recoveries']} repairs={out['repairs']} "
+          f"stragglers={out['stragglers']}")
 
 
 if __name__ == "__main__":

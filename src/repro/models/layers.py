@@ -466,7 +466,10 @@ def attention_prefill(p, cfg: ModelConfig, x, *, window=None):
     o = chunked_attention(q, k, v, causal=True, window=window)
     y = o.reshape(B, S, cfg.q_dim) @ p["wo"]
     if window is not None and S >= window:
-        assert S % window == 0, "windowed prefill needs S % window == 0"
+        if S % window != 0:
+            raise ValueError(
+                f"windowed prefill needs S % window == 0, got "
+                f"S={S} window={window}")
         ck, cv = k[:, S - window:], v[:, S - window:]
     else:
         ck, cv = k, v
@@ -783,7 +786,9 @@ def _wkv_chunk_scan(r, k, v, w, u, chunk: int):
     """
     B, S, H, hd = r.shape
     C = chunk
-    assert S % C == 0, (S, C)
+    if S % C != 0:
+        raise ValueError(f"linear-attention chunking needs S % chunk "
+                         f"== 0, got S={S} chunk={C}")
     n = S // C
     rs = r.reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,hd)
     ks_ = k.reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)

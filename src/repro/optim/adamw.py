@@ -44,6 +44,14 @@ class OptConfig:
     comm_mode: str = "multilevel"
 
     @property
+    def error_feedback(self) -> bool:
+        """True when the opt state carries an EF residual: the int8 slow-hop
+        exchange rounds every step, and without feeding the rounding error
+        back into the next step's gradient the bias accumulates in the
+        optimiser (the compressed path drifts from the exact trajectory)."""
+        return self.comm_mode == "multilevel_compress"
+
+    @property
     def sharded_state(self) -> bool:
         """True when the opt state lives as 1/|data| shards.  The flat
         (topology-unaware) baseline always runs the dense path in
@@ -97,61 +105,93 @@ def _adamw_math(m, v, g, master, cfg: OptConfig, lr, t, decay_mask=1.0):
 # State
 # ---------------------------------------------------------------------- #
 
-def init_opt_state(params: Any, cfg: OptConfig) -> dict:
+def init_opt_state(params: Any, cfg: OptConfig, n_slow: int = 1) -> dict:
     """m/v/master as GLOBAL arrays mirroring params (f32).  Under ZeRO-1 the
     launcher device_puts them sharded over `data` along the scatter axis (see
-    ``opt_manual_specs``); dense mode replicates them over dp."""
+    ``opt_manual_specs``); dense mode replicates them over dp.  The
+    compressed comm mode adds an ``ef`` error-feedback residual per leaf:
+    shape ``(n_slow,) + param.shape``, sharded over BOTH the slow axis
+    (leading dim — every pod quantises its own partial sum, so residuals
+    diverge per pod rank) and `data` along the scatter axis.  ``n_slow``
+    is the slow-axis (pod) degree."""
     zeros = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params)
     # copy=True: an f32 param leaf must not alias its master (donation!)
     master = jax.tree.map(
         lambda l: jnp.array(l, dtype=jnp.float32, copy=True), params)
-    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros), "master": master,
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+             "master": master, "step": jnp.zeros((), jnp.int32)}
+    if cfg.error_feedback:
+        state["ef"] = jax.tree.map(
+            lambda l: jnp.zeros((max(n_slow, 1),) + l.shape, jnp.float32),
+            params)
+    return state
 
 
 def opt_manual_specs(params: Any, cfg: OptConfig, data_size: int,
-                     model_dims: Any | None = None) -> dict:
+                     model_dims: Any | None = None,
+                     slow_axis: str | None = None) -> dict:
     """Manual-axis PartitionSpecs for the opt state (the shard_map in/out
-    specs for dp axes).  ZeRO-1: P('data' at scatter axis); dense: P()."""
+    specs for dp axes).  ZeRO-1: P('data' at scatter axis); dense: P().
+    The EF residual (leading slow dim, see :func:`init_opt_state`) shards
+    over ``slow_axis`` + 'data' even in dense mode: each (pod, data) rank
+    owns the rounding error of the shard IT exchanged."""
     from jax.sharding import PartitionSpec as P
 
-    if not cfg.sharded_state:
-        spec = jax.tree.map(lambda _: P(), params)
-    else:
-        axes = scatter_axes(params, data_size, model_dims)
+    axes = scatter_axes(params, data_size, model_dims)
 
-        def to_spec(leaf, ax):
-            if ax is None:
-                return P()
-            dims = [None] * leaf.ndim
+    def to_spec(leaf, ax, lead=False):
+        dims = [None] * leaf.ndim
+        if ax is not None:
             dims[ax] = "data"
-            return P(*dims)
+        if lead:
+            dims = [slow_axis] + dims
+        elif ax is None:
+            return P()
+        return P(*dims)
 
-        spec = jax.tree.map(to_spec, params, axes)
-    return {"m": spec, "v": spec,
-            "master": jax.tree.map(lambda s: s, spec),
-            "step": P()}
+    scattered = jax.tree.map(to_spec, params, axes)
+    spec = (scattered if cfg.sharded_state
+            else jax.tree.map(lambda _: P(), params))
+    out = {"m": spec, "v": spec,
+           "master": jax.tree.map(lambda s: s, spec),
+           "step": P()}
+    if cfg.error_feedback:
+        out["ef"] = jax.tree.map(lambda l, ax: to_spec(l, ax, lead=True),
+                                 params, axes)
+    return out
 
 
 # ---------------------------------------------------------------------- #
 # The update (INSIDE shard_map; manual dp axes, auto model axis)
 # ---------------------------------------------------------------------- #
 
-def _sync_shard(g, ax, slow_axis, cfg: OptConfig):
+def _sync_shard(g, ax, slow_axis, cfg: OptConfig, ef=None):
     """Multilevel stage 1+2 for one leaf: reduce-scatter intra-pod, then the
-    (optionally compressed) slow-axis exchange on the 1/|data| shard."""
+    (optionally compressed) slow-axis exchange on the 1/|data| shard.
+
+    ``ef`` is the leaf's error-feedback residual (local shard, same shape
+    the scatter produces); when given the return is ``(g, new_ef)`` — the
+    residual is folded into the compressed exchange and the fresh rounding
+    error comes back to be carried into the next step."""
     if ax is not None:
         g = lax.psum_scatter(g.astype(jnp.float32), "data",
                              scatter_dimension=ax, tiled=True)
     else:
         g = lax.psum(g.astype(jnp.float32), "data")
+    new_ef = ef
     if slow_axis is not None:
         if cfg.comm_mode == "multilevel_compress":
             shp = g.shape
-            g = compression.compressed_psum(g.reshape(-1), slow_axis).reshape(shp)
+            if ef is not None:
+                g, new_ef = compression.compressed_psum(
+                    g.reshape(-1), slow_axis, ef=ef.reshape(-1))
+                g, new_ef = g.reshape(shp), new_ef.reshape(shp)
+            else:
+                g = compression.compressed_psum(
+                    g.reshape(-1), slow_axis).reshape(shp)
         else:
             g = lax.psum(g, slow_axis)
-    return g
+    return g if ef is None else (g, new_ef)
 
 
 def apply_updates(
@@ -173,12 +213,27 @@ def apply_updates(
     axes = scatter_axes(params, data_size, model_dims)
     norm_axes = ("data",) + ((model_axis,) if model_axis else ())
 
+    is_pair = lambda x: isinstance(x, tuple)
+
     if not cfg.sharded_state:
         # Baseline (topology-unaware) or dense mode: full grads everywhere.
         dp = tuple(a for a in (slow_axis, "data") if a)
+        new_ef = opt.get("ef")
         if cfg.comm_mode == "flat":
             grads = jax.tree.map(
                 lambda g: lax.psum(g.astype(jnp.float32), dp) / dp_degree, grads)
+        elif cfg.error_feedback:
+            # dense compressed: the EF residual lives on each rank's shard
+            # (ef leaves carry a leading slow-axis dim, locally size 1)
+            def ml_ef(g, ax, e):
+                gs, ne = _sync_shard(g, ax, slow_axis, cfg, e[0])
+                gs = gs / dp_degree
+                if ax is not None:
+                    gs = lax.all_gather(gs, "data", axis=ax, tiled=True)
+                return gs, ne[None]
+            pairs = jax.tree.map(ml_ef, grads, axes, opt["ef"])
+            grads = jax.tree.map(lambda r: r[0], pairs, is_leaf=is_pair)
+            new_ef = jax.tree.map(lambda r: r[1], pairs, is_leaf=is_pair)
         else:  # multilevel but dense state: scatter + slow + gather per leaf
             def ml(g, ax):
                 gs = _sync_shard(g, ax, slow_axis, cfg) / dp_degree
@@ -193,16 +248,29 @@ def apply_updates(
         res = jax.tree.map(
             lambda m, v, g, w: _adamw_math(m, v, g * scale, w, cfg, lr, t),
             opt["m"], opt["v"], grads, opt["master"])
-        new_m = jax.tree.map(lambda r: r[0], res, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda r: r[1], res, is_leaf=lambda x: isinstance(x, tuple))
-        new_w = jax.tree.map(lambda r: r[2], res, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda r: r[0], res, is_leaf=is_pair)
+        new_v = jax.tree.map(lambda r: r[1], res, is_leaf=is_pair)
+        new_w = jax.tree.map(lambda r: r[2], res, is_leaf=is_pair)
         new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), new_w, params)
-        return new_params, dict(opt, m=new_m, v=new_v, master=new_w, step=t)
+        out = dict(opt, m=new_m, v=new_v, master=new_w, step=t)
+        if new_ef is not None:
+            out["ef"] = new_ef
+        return new_params, out
 
     # ---------------- ZeRO-1 multilevel path ---------------- #
-    shards = jax.tree.map(
-        lambda g, ax: _sync_shard(g, ax, slow_axis, cfg) / dp_degree,
-        grads, axes)
+    new_ef = None
+    if cfg.error_feedback:
+        # ef leaves carry a leading slow-axis dim (locally size 1)
+        pairs = jax.tree.map(
+            lambda g, ax, e: _sync_shard(g, ax, slow_axis, cfg, e[0]),
+            grads, axes, opt["ef"])
+        shards = jax.tree.map(lambda r: r[0] / dp_degree, pairs,
+                              is_leaf=is_pair)
+        new_ef = jax.tree.map(lambda r: r[1][None], pairs, is_leaf=is_pair)
+    else:
+        shards = jax.tree.map(
+            lambda g, ax: _sync_shard(g, ax, slow_axis, cfg) / dp_degree,
+            grads, axes)
     # global grad norm from the shards (they tile the full gradient exactly;
     # leaves that could not scatter are replicated -> divide their sq once)
     def sq(g, ax):
@@ -215,9 +283,9 @@ def apply_updates(
     res = jax.tree.map(
         lambda m, v, g, w: _adamw_math(m, v, g * scale, w, cfg, lr, t),
         opt["m"], opt["v"], shards, opt["master"])
-    new_m = jax.tree.map(lambda r: r[0], res, is_leaf=lambda x: isinstance(x, tuple))
-    new_v = jax.tree.map(lambda r: r[1], res, is_leaf=lambda x: isinstance(x, tuple))
-    new_w = jax.tree.map(lambda r: r[2], res, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda r: r[0], res, is_leaf=is_pair)
+    new_v = jax.tree.map(lambda r: r[1], res, is_leaf=is_pair)
+    new_w = jax.tree.map(lambda r: r[2], res, is_leaf=is_pair)
 
     # stage 3: all-gather updated PARAMS across the fast axis.  Cast to the
     # compute dtype BEFORE the gather: halves the wire bytes and kills the
@@ -227,4 +295,7 @@ def apply_updates(
         return wc if ax is None else lax.all_gather(wc, "data", axis=ax,
                                                     tiled=True)
     new_params = jax.tree.map(gather, new_w, axes, params)
-    return new_params, dict(opt, m=new_m, v=new_v, master=new_w, step=t)
+    out = dict(opt, m=new_m, v=new_v, master=new_w, step=t)
+    if new_ef is not None:
+        out["ef"] = new_ef
+    return new_params, out

@@ -22,7 +22,8 @@ from typing import Callable
 import numpy as np
 
 __all__ = ["HeartbeatTracker", "FailureInjector", "ElasticPlan",
-           "plan_recovery", "StragglerMonitor"]
+           "plan_recovery", "StragglerMonitor", "has_quorum",
+           "pod_member_ranks"]
 
 
 # ---------------------------------------------------------------------- #
@@ -61,6 +62,26 @@ class FailureInjector:
 
     def failed_pods_at(self, step: int) -> list[int]:
         return self.schedule.pop(step, [])
+
+
+def has_quorum(total: int, n_failed: int, quorum: float = 0.5) -> bool:
+    """True when strictly more than ``quorum`` of ``total`` members survive
+    ``n_failed`` losses — the threshold between in-place communicator
+    repair (carry live state, no replay) and checkpoint-restart."""
+    return (total - n_failed) > quorum * total
+
+
+def pod_member_ranks(mesh_shape: tuple[int, ...],
+                     axis_names: tuple[str, ...],
+                     pods: list[int]) -> list[int]:
+    """Data-parallel member ranks living on the given pods, in the flat
+    row-major (pod, data) rank space shared by ``launch.mesh.dp_topology``
+    and the jax backend — what :meth:`Communicator.repair` takes."""
+    shape = dict(zip(axis_names, mesh_shape))
+    data = shape.get("data", 1)
+    n_pods = shape.get("pod", 1)
+    return [p * data + i for p in sorted(set(pods)) if p < n_pods
+            for i in range(data)]
 
 
 # ---------------------------------------------------------------------- #

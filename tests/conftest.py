@@ -42,6 +42,11 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
         env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
         env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "1")
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # Deliberately do NOT forward -O / PYTHONOPTIMIZE: pytest's assertion
+    # rewriting protects only in-process test modules, so optimizing the
+    # child would strip the snippet's own acceptance asserts and leave it
+    # validating nothing.  The CI `python -O` leg gets its source coverage
+    # from the in-process tests (kernels/models import directly there).
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=timeout, env=env)
     if out.returncode != 0:

@@ -191,6 +191,77 @@ def test_size_bucket():
     assert size_bucket(2048) == 11
 
 
+def test_size_bucket_boundaries():
+    """Satellite coverage: the degenerate and boundary inputs."""
+    assert size_bucket(-1) == -1 and size_bucket(-0.5) == -1
+    # sub-2-byte payloads clamp into bucket 0 (log2 < 1 -> int -> <= 0)
+    assert size_bucket(0.25) == 0
+    assert size_bucket(0.5) == 0
+    assert size_bucket(1.0) == 0
+    assert size_bucket(1.999) == 0
+    # exact powers of two open their own octave
+    for k in (1, 2, 10, 20, 30):
+        assert size_bucket(2.0 ** k) == k
+        assert size_bucket(2.0 ** k - 1) == k - 1
+        assert size_bucket(2.0 ** k + 1) == k
+
+
+def test_plan_cache_eviction_order_and_clear_stats():
+    from repro.core import PlanCache
+
+    cache = PlanCache(maxsize=2)
+    built = []
+
+    def make(tag):
+        def build():
+            built.append(tag)
+            return tag  # the cache is value-agnostic
+        return build
+
+    cache.get_or_build("a", make("a"))
+    cache.get_or_build("b", make("b"))
+    cache.get_or_build("a", make("a"))          # hit: refreshes a's LRU slot
+    cache.get_or_build("c", make("c"))          # evicts b (LRU), not a
+    assert built == ["a", "b", "c"]
+    cache.get_or_build("a", make("a2"))
+    assert built == ["a", "b", "c"]             # a survived the eviction
+    cache.get_or_build("b", make("b2"))         # b was evicted: rebuilt
+    assert built == ["a", "b", "c", "b2"]
+    assert cache.hits == 2 and cache.misses == 4
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.hits == 0 and cache.misses == 0
+    assert cache.maxsize == 2                   # capacity is configuration
+    cache.get_or_build("a", make("a3"))
+    assert cache.misses == 1 and cache.hits == 0
+
+
+def test_per_call_policy_never_served_stale_plan(fig8):
+    """Regression: the cache key omitted the policy, so a per-call
+    ``policy=`` override could be handed a plan built under the
+    communicator's default policy (and vice versa)."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    p_paper = comm.plan("bcast", root=0, nbytes=64e3)
+    p_obliv = comm.plan("bcast", root=0, nbytes=64e3, policy="oblivious")
+    assert p_obliv is not p_paper
+    assert p_obliv.tree.children != p_paper.tree.children
+    # the paper plan crosses the WAN once; the oblivious binomial does not
+    wan = lambda t: sum(1 for p, cs in t.children.items() for c in cs
+                        if fig8.comm_level(p, c) == 0)
+    assert wan(p_paper.tree) == 1 and wan(p_obliv.tree) > 1
+    # both entries coexist: repeat calls hit their own entry
+    assert comm.plan("bcast", root=0, nbytes=64e3) is p_paper
+    assert comm.plan("bcast", root=0, nbytes=64e3,
+                     policy="oblivious") is p_obliv
+    # an explicit override equal to the default shares the default entry
+    assert comm.plan("bcast", root=0, nbytes=64e3, policy="paper") is p_paper
+    # per-call size-dependent policies bucket by size even when the
+    # communicator default would not
+    a1 = comm.plan("bcast", root=0, nbytes=17e3, policy="adaptive")
+    a2 = comm.plan("bcast", root=0, nbytes=900e3, policy="adaptive")
+    assert a1 is not a2
+
+
 def test_members_subset(fig8):
     members = [0, 1, 2, 16, 17, 32, 33]
     comm = Communicator(fig8, policy="paper", members=members)
