@@ -11,6 +11,16 @@ from __future__ import annotations
 import json
 import os
 
+# The committed artifacts this guard covers, keyed by repo-root filename.
+# A new benchmark registers here (and a `--smoke` leg in the bench-smoke CI
+# job) so its persisted schema is guarded from day one.
+ARTIFACTS = {
+    "BENCH_collectives.json": "benchmarks/bench_collectives.py",
+    "BENCH_discovery.json": "benchmarks/bench_discovery.py",
+    "BENCH_elastic.json": "benchmarks/bench_elastic.py",
+    "BENCH_engine.json": "benchmarks/bench_engine.py",
+}
+
 
 def schema_of(x):
     """Recursive shape of a JSON document: dict keys and list element shape

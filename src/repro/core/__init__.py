@@ -15,10 +15,13 @@ The heavier device modules (:mod:`repro.core.collectives`,
 ``jax``/``ppermute`` backends — importing :mod:`repro.core` stays light for
 simulator-only use.
 """
-from .communicator import (BACKENDS, CacheInfo, Communicator, OPS, OpSpec,
-                           Plan, PlanCache, PlanChoice, RefreshReport,
-                           RepairReport, SimResult, register_op,
-                           select_plan, select_tree, size_bucket)
+from .communicator import (BACKENDS, CacheInfo, CommStats, Communicator,
+                           OPS, OpSpec, Plan, PlanCache, PlanChoice,
+                           RefreshReport, RepairReport, SimResult,
+                           register_op, select_plan, select_tree,
+                           size_bucket)
+from .engine import (Engine, EngineStats, Handle, overlapped_step_times,
+                     partition_buckets)
 from .discovery import (ProbeSet, TargetedProbes, cluster_probes,
                         device_probes, discover, environment_topology,
                         fit_levels, fit_topology, measure_drift,
@@ -35,7 +38,10 @@ from .trees import (LevelPolicy, PAPER_POLICY, Tree, adaptive_policy,
 __all__ = [
     # the front door
     "Communicator", "Plan", "PlanCache", "PlanChoice", "SimResult",
-    "CacheInfo", "RepairReport", "RefreshReport",
+    "CacheInfo", "CommStats", "RepairReport", "RefreshReport",
+    # the async engine (nonblocking handles + concurrent scheduling)
+    "Engine", "EngineStats", "Handle", "partition_buckets",
+    "overlapped_step_times",
     # topology discovery (probe -> cluster -> fit)
     "ProbeSet", "simulated_probes", "environment_topology", "device_probes",
     "cluster_probes", "fit_levels", "fit_topology", "discover",

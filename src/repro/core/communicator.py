@@ -60,6 +60,7 @@ __all__ = [
     "Plan",
     "PlanCache",
     "CacheInfo",
+    "CommStats",
     "RepairReport",
     "RefreshReport",
     "SimResult",
@@ -384,6 +385,29 @@ CacheInfo = collections.namedtuple(
 
 
 @dataclasses.dataclass(frozen=True)
+class CommStats:
+    """Plan-reuse and elasticity counters for one communicator.
+
+    ``hits``/``misses`` are plan-cache lookups; ``evictions`` counts
+    CAPACITY evictions only (``refresh``'s wholesale invalidation is a
+    deliberate cost-model change, not cache pressure, and is reported by
+    its own return value).  ``tree_builds`` is the number of candidate
+    trees ever constructed and ``repairs`` the number of
+    :meth:`Communicator.repair` calls that removed at least one member —
+    together they let the engine and benchmarks *assert* plan reuse
+    instead of inferring it from timing.
+    """
+
+    hits: int
+    misses: int
+    evictions: int
+    currsize: int
+    maxsize: int
+    tree_builds: int
+    repairs: int
+
+
+@dataclasses.dataclass(frozen=True)
 class RepairReport:
     """Outcome of one :meth:`Communicator.repair` call.
 
@@ -420,6 +444,7 @@ class PlanCache:
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self._d: collections.OrderedDict = collections.OrderedDict()
 
     def get_or_build(self, key, build: Callable[[], Plan]) -> Plan:
@@ -432,6 +457,7 @@ class PlanCache:
         self._d[key] = plan
         if len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self.evictions += 1
         return plan
 
     def __len__(self) -> int:
@@ -439,7 +465,7 @@ class PlanCache:
 
     def clear(self) -> None:
         self._d.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0
 
     # -- surgical access (elastic repair) ------------------------------- #
     def items(self) -> list[tuple[Any, Plan]]:
@@ -457,6 +483,7 @@ class PlanCache:
         self._d.move_to_end(key)
         if len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self.evictions += 1
 
     def invalidate(self) -> None:
         """Drop every entry but keep hit/miss statistics (unlike
@@ -824,6 +851,14 @@ class Communicator:
         return CacheInfo(c.hits, c.misses, len(c), c.maxsize,
                          self.tree_builds)
 
+    def stats(self) -> CommStats:
+        """Plan-reuse counters (:class:`CommStats`): cache hits, misses,
+        capacity evictions, tree builds, and repairs — what the async
+        engine and the benchmarks assert plan reuse against."""
+        c = self._cache
+        return CommStats(c.hits, c.misses, c.evictions, len(c), c.maxsize,
+                         self.tree_builds, self.repairs)
+
     def clear_cache(self) -> None:
         self._cache.clear()
         self.tree_builds = 0
@@ -967,9 +1002,17 @@ class Communicator:
         return self.backend.run(op, plan, x, root)
 
     def allreduce_tree(self, grads, *, mode: str = "multilevel",
-                       mean_over: int | None = None, ef=None):
+                       mean_over: int | None = None, ef=None,
+                       bucket_bytes: float | None = None):
         """All-reduce a gradient pytree (jax backend only): fuses all leaves
         into one flat buffer per level — see collectives.multilevel_psum_tree.
+
+        ``bucket_bytes`` switches to SIZE-TARGETED BUCKETS in reverse leaf
+        order (:func:`~repro.core.collectives.bucketed_psum_tree`): one
+        collective per bucket instead of one monolithic buffer, so the
+        device scheduler can overlap bucket k's sync with the backward of
+        the layers below it.  Incompatible with ``ef`` / the compressed
+        mode (the residual is shaped by the exchange).
 
         ``ef`` is the error-feedback residual for
         ``mode="multilevel_compress"`` (build it once with
@@ -979,12 +1022,39 @@ class Communicator:
         across steps."""
         if not isinstance(self.backend, JaxBackend):
             raise ValueError("allreduce_tree requires backend='jax'")
+        if bucket_bytes is not None:
+            if ef is not None:
+                raise ValueError("bucketed sync does not thread an "
+                                 "error-feedback residual")
+            from .collectives import bucketed_psum_tree
+            return bucketed_psum_tree(grads, self.slow_axis, self.fast_axes,
+                                      bucket_bytes=bucket_bytes, mode=mode,
+                                      mean_over=mean_over)
         from .collectives import multilevel_psum_tree
         return multilevel_psum_tree(grads, self.slow_axis, self.fast_axes,
                                     mode=mode, mean_over=mean_over, ef=ef)
 
     # -- introspection ----------------------------------------------------- #
     def _nbytes_of(self, op: str, x) -> float:
+        """The plan-sizing byte count for one operand.
+
+        PINNED SEMANTICS (plan selection, segment sizing, and the engine's
+        bucketing argmin all key off this number):
+
+        * ``bcast`` / ``reduce`` / ``allreduce`` — the full payload every
+          rank holds (the schedule ships exactly this many bytes per edge).
+        * ``gather`` / ``allgather`` / ``scatter`` — the PER-RANK
+          contribution; aggregate traffic grows with subtree sizes
+          (``S.gather`` message bytes are ``subtree_size * nbytes``), so
+          sizing these by the aggregate would overshoot plan selection by
+          a factor of P.
+
+        Numeric operands are that quantity directly.  Device operands
+        (arrays/tracers) are sized from the local shard — which IS the
+        per-rank contribution for gather/allgather, but for ``scatter``
+        the operand is the root's full ``[P, ...]`` buffer, so it is
+        divided by the member count to recover the per-rank chunk.
+        """
         if not OPS[op].sized or x is None:
             return 0.0
         if isinstance(x, (int, float)):
@@ -994,7 +1064,10 @@ class Communicator:
         for d in getattr(x, "shape", ()):
             size *= int(d)
         itemsize = getattr(getattr(x, "dtype", None), "itemsize", 4)
-        return float(size * itemsize)
+        nbytes = float(size * itemsize)
+        if op == "scatter":
+            nbytes /= max(len(self.members), 1)
+        return nbytes
 
     def slow_crossings(self, op: str, *, root: int = 0,
                        nbytes: float = 0.0) -> int:

@@ -26,15 +26,26 @@ Two executors:
     max(dependencies delivered, sender NIC free); per-rank program order is
     FIFO.  This is where segment pipelining is priced: a node forwards
     segment k while segment k+1 is still in flight toward it.
+:func:`simulate_concurrent`
+    Several ``Lowered`` programs live on the network AT ONCE (what the
+    async engine in :mod:`repro.core.engine` schedules).  Contention is
+    charged per *link* — a link is one directed edge (src, dst) at its
+    level's bandwidth — as fluid fair sharing: k concurrent transfers on a
+    link each proceed at bandwidth/k (or, under strict priorities, only the
+    highest-priority program's transfers proceed).  A program alone on its
+    links prices bit-identically to :func:`simulate_rounds`.
 """
 from __future__ import annotations
 
+import heapq
 import math
+from typing import Mapping, Sequence
 
 from .schedule import Direction, Schedule
 from .topology import Topology
 
-__all__ = ["simulate", "simulate_rounds", "simulate_op", "probe_time"]
+__all__ = ["simulate", "simulate_rounds", "simulate_concurrent",
+           "simulate_op", "probe_time"]
 
 
 def simulate(sched: Schedule, topo: Topology, start: float = 0.0) -> dict[int, float]:
@@ -130,7 +141,18 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
     detector observes; dead ranks report their death time.  With
     ``fail_at`` empty/None the timing is bit-identical to the fault-free
     path.
+
+    ``lowered`` may also be a *sequence* of ``Lowered`` programs: they are
+    handed to :func:`simulate_concurrent` (all released at ``start``, fair
+    link sharing) and a list of per-program completion dicts is returned.
+    ``fail_at`` is a single-program feature and is rejected there.
     """
+    if isinstance(lowered, (list, tuple)):
+        if fail_at:
+            raise ValueError("fail_at is not supported for concurrent "
+                             "programs; inject failures per single program")
+        return simulate_concurrent(lowered, topo,
+                                   starts=[start] * len(lowered))
     death = fail_at or {}
     sender_free: dict[int, float] = {}
     recv_free: dict[int, float] = {}
@@ -182,6 +204,277 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
         if r in completion:
             completion[r] = min(completion[r], t)
     return completion
+
+
+# ---------------------------------------------------------------------- #
+# The concurrent executor: many live programs, per-link bandwidth sharing.
+# ---------------------------------------------------------------------- #
+
+_ACTIVATE, _FINISH = 0, 1
+
+
+def simulate_concurrent(programs: Sequence, topo: Topology, *,
+                        starts: Sequence[float] | None = None,
+                        deps: "Mapping[int, Sequence[int]] | Sequence[Sequence[int]] | None" = None,
+                        priorities: Sequence[float] | None = None,
+                        ) -> list[dict[int, float]]:
+    """Execute several ``Lowered`` programs concurrently on ``topo``.
+
+    Returns one per-rank completion dict per program (same contract as
+    :func:`simulate_rounds` per program).
+
+    Model — the postal model extended with *fluid link sharing*:
+
+    * A **link** is a directed edge (src, dst) charged at its level-class
+      bandwidth.  The k transfers concurrently active on a link each flow at
+      ``bandwidth / k`` (processor sharing); rates re-divide whenever a
+      transfer joins or drains.  Within ONE program a sender's FIFO NIC
+      admits at most one in-flight transfer, so a program that shares no
+      link with another prices **bit-identically** to its isolated
+      :func:`simulate_rounds` run — contention is the only coupling.
+    * ``starts[j]`` releases program j at an absolute time (default 0.0).
+    * ``deps[j]`` names programs that must COMPLETE (every rank done)
+      before program j is released — how the engine encodes per-member-set
+      FIFO order and explicit handle dependencies.
+    * ``priorities[j]`` switches a link from fair sharing to strict
+      priority: only the highest-priority transfers active on the link
+      flow, lower ones stall until the link clears.  Equal priorities
+      share fairly.  ``None`` means all-fair.
+
+    Latency and sender/receiver overheads stay per-message quantities
+    (charged once at flow end for ``first`` sends), and reduce messages
+    still drain sequentially at the receiver — both exactly as in the
+    single-program executor.
+    """
+    progs = list(programs)
+    K = len(progs)
+    rel = list(starts) if starts is not None else [0.0] * K
+    if len(rel) != K:
+        raise ValueError(f"need {K} start times, got {len(rel)}")
+    if deps is None:
+        pdeps: list[list[int]] = [[] for _ in range(K)]
+    elif isinstance(deps, Mapping):
+        pdeps = [sorted(set(deps.get(j, ()))) for j in range(K)]
+    else:
+        pdeps = [sorted(set(deps[j])) for j in range(K)]
+    for j, ds in enumerate(pdeps):
+        if any(d == j or not 0 <= d < K for d in ds):
+            raise ValueError(f"bad program dependency list for #{j}: {ds}")
+    prio = list(priorities) if priorities is not None else None
+
+    # -- flatten the programs into one transfer table ------------------- #
+    off = [0]
+    for p in progs:
+        off.append(off[-1] + len(p.sends))
+    n = off[-1]
+    prog_of = [0] * n
+    send_of = [None] * n
+    lvl_of = [None] * n
+    gdeps: list[tuple[int, ...]] = [()] * n
+    fifo_next: list[int | None] = [None] * n
+    rev: list[list[int]] = [[] for _ in range(n)]
+    fold_chain: dict[tuple[int, int], list[int]] = {}
+    for j, p in enumerate(progs):
+        last_of_src: dict[int, int] = {}
+        for i, snd in enumerate(p.sends):
+            g = off[j] + i
+            prog_of[g] = j
+            send_of[g] = snd
+            lvl_of[g] = topo.level_of_edge(snd.src, snd.dst)
+            gdeps[g] = tuple(off[j] + d for d in snd.deps)
+            for d in gdeps[g]:
+                rev[d].append(g)
+            prev = last_of_src.get(snd.src)
+            if prev is not None:
+                fifo_next[prev] = g
+            last_of_src[snd.src] = g
+            if snd.kind == "reduce":
+                fold_chain.setdefault((j, snd.dst), []).append(g)
+
+    # -- per-transfer dynamic state ------------------------------------- #
+    released = [len(ds) == 0 for ds in pdeps]
+    pdep_left = [len(ds) for ds in pdeps]
+    completion: list[dict[int, float] | None] = [None] * K
+    finish: list[float | None] = [None] * K
+    left = [len(p.sends) for p in progs]
+    rdeps: list[list[int]] = [[] for _ in range(K)]
+    for j, ds in enumerate(pdeps):
+        for d in ds:
+            rdeps[d].append(j)
+
+    delivered: list[float | None] = [None] * n
+    arrived: list[float | None] = [None] * n      # reduce flow-arrivals
+    sender_term: list[float | None] = [None] * n  # prev inject_end (FIFO)
+    waiting = [0] * n
+    remaining = [0.0] * n
+    rate = [0.0] * n
+    last_t = [0.0] * n
+    flow_end = [math.inf] * n
+    active = [False] * n
+    done = [False] * n
+    recv_free: dict[tuple[int, int], float] = {}
+    chain_ptr: dict[tuple[int, int], int] = {k: 0 for k in fold_chain}
+    edge_active: dict[tuple[int, int], list[int]] = {}
+
+    events: list[tuple[float, int, int, int]] = []
+    seq = 0
+
+    def push(t: float, kind: int, g: int) -> None:
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, g))
+        seq += 1
+
+    def ready(g: int) -> None:
+        """All gates known: compute the injection start and schedule it."""
+        j = prog_of[g]
+        t0 = rel[j]
+        st = sender_term[g]
+        if st is not None and st > t0:
+            t0 = st
+        for d in gdeps[g]:
+            if delivered[d] > t0:  # type: ignore[operator]
+                t0 = delivered[d]
+        remaining[g] = send_of[g].nbytes
+        push(t0, _ACTIVATE, g)
+
+    def reshare(e: tuple[int, int], now: float) -> None:
+        """Re-divide a link's bandwidth among its active transfers."""
+        xs = edge_active.get(e)
+        if not xs:
+            return
+        if prio is None:
+            elig = xs
+        else:
+            top = max(prio[prog_of[x]] for x in xs)
+            elig = [x for x in xs if prio[prog_of[x]] == top]
+        bw = lvl_of[xs[0]].bandwidth
+        each = bw / len(elig)
+        for x in xs:
+            if rate[x] > 0.0:
+                remaining[x] = max(0.0, remaining[x]
+                                   - (now - last_t[x]) * rate[x])
+            last_t[x] = now
+            if x in elig:
+                rate[x] = each
+                flow_end[x] = max(now, now + remaining[x] / each)
+                push(flow_end[x], _FINISH, x)
+            else:
+                rate[x] = 0.0
+                flow_end[x] = math.inf
+
+    def gate_down(g: int) -> None:
+        waiting[g] -= 1
+        if waiting[g] == 0:
+            ready(g)
+
+    def deliver(g: int, t: float) -> None:
+        """A transfer's payload is usable at the receiver: unblock waiters
+        and retire it from its program."""
+        delivered[g] = t
+        snd = send_of[g]
+        j = prog_of[g]
+        c = completion[j]
+        if c[snd.dst] < t:  # type: ignore[index]
+            c[snd.dst] = t
+        for w in rev[g]:
+            gate_down(w)
+        left[j] -= 1
+        if left[j] == 0:
+            finalize(j)
+
+    def drain_folds(j: int, dst: int) -> None:
+        """Sequential receive occupancy, in program order (exactly the
+        single-program executor's recv_free rule)."""
+        key = (j, dst)
+        chain = fold_chain[key]
+        p = chain_ptr[key]
+        while p < len(chain) and arrived[chain[p]] is not None:
+            g = chain[p]
+            rf = recv_free.get(key, rel[j])
+            t = max(arrived[g], rf) + lvl_of[g].overhead
+            recv_free[key] = t
+            deliver(g, t)
+            p += 1
+        chain_ptr[key] = p
+
+    def finalize(j: int) -> None:
+        finish[j] = max(completion[j].values())  # type: ignore[union-attr]
+        for k in rdeps[j]:
+            pdep_left[k] -= 1
+            if pdep_left[k] == 0:
+                release(k)
+
+    def release(j: int) -> None:
+        t = rel[j]
+        for d in pdeps[j]:
+            if finish[d] > t:  # type: ignore[operator]
+                t = finish[d]
+        rel[j] = t
+        released[j] = True
+        completion[j] = {r: t for r in progs[j].members}
+        if left[j] == 0:  # empty program: complete at release
+            finalize(j)
+            return
+        for i in range(len(progs[j].sends)):
+            gate_down(off[j] + i)
+
+    # -- init ------------------------------------------------------------ #
+    for g in range(n):
+        j = prog_of[g]
+        waiting[g] = 1 + len(gdeps[g])  # release gate + data deps
+        # the FIFO gate: all but a rank's first send wait on a predecessor
+    for g in range(n):
+        nx = fifo_next[g]
+        if nx is not None:
+            waiting[nx] += 1
+    for j in range(K):
+        if released[j]:
+            released[j] = False  # release() re-marks and opens the gate
+            release(j)
+
+    # -- event loop ------------------------------------------------------ #
+    while events:
+        t, _, kind, g = heapq.heappop(events)
+        if done[g]:
+            continue
+        if kind == _ACTIVATE:
+            e = (send_of[g].src, send_of[g].dst)
+            edge_active.setdefault(e, []).append(g)
+            active[g] = True
+            last_t[g] = t
+            reshare(e, t)
+            continue
+        if not active[g] or flow_end[g] != t:
+            continue  # stale finish event (rate changed since)
+        snd = send_of[g]
+        lvl = lvl_of[g]
+        j = prog_of[g]
+        done[g] = True
+        active[g] = False
+        e = (snd.src, snd.dst)
+        edge_active[e].remove(g)
+        reshare(e, t)
+        inject_end = t + (lvl.overhead if snd.first else 0.0)
+        c = completion[j]
+        if c[snd.src] < inject_end:  # type: ignore[index]
+            c[snd.src] = inject_end
+        nx = fifo_next[g]
+        if nx is not None:
+            sender_term[nx] = inject_end
+            gate_down(nx)
+        arrival = t + (lvl.latency if snd.first else 0.0)
+        if snd.kind == "reduce":
+            arrived[g] = arrival
+            drain_folds(j, snd.dst)
+        else:
+            deliver(g, arrival)
+
+    if any(f is None for f in finish):
+        stuck = [j for j, f in enumerate(finish) if f is None]
+        raise ValueError(
+            f"programs {stuck} never completed — cyclic dependencies "
+            f"between programs, or a malformed send program")
+    return completion  # type: ignore[return-value]
 
 
 def simulate_op(op_fn, tree, topo: Topology, nbytes: float) -> float:

@@ -30,11 +30,36 @@ from repro.configs.shapes import ShapeSpec, AUDIO_SRC_FRACTION
 
 __all__ = ["model_dims_of", "make_train_step", "make_prefill_step",
            "make_decode_step", "train_in_shardings", "cache_shardings",
-           "abstract_params"]
+           "abstract_params", "layer_grad_bytes"]
 
 
 def abstract_params(cfg: ModelConfig):
     return jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def layer_grad_bytes(cfg: ModelConfig, model_size: int = 1) -> list[float]:
+    """Per-layer gradient wire bytes (f32 sync) in FORWARD order.
+
+    Backward produces gradients for these entries last-to-first, which is
+    exactly the issue order of the engine's bucketed gradient sync — feed
+    this list to :func:`repro.core.engine.overlapped_step_times` (the
+    train driver's overlap estimate and ``benchmarks/bench_engine.py`` do).
+    Entry 0 aggregates the non-layer leaves (embedding/head/norms): their
+    gradients arrive at the very end of backward.  ``model_size`` divides
+    out the tensor-parallel shard — the sync moves 1/model_size of the
+    bytes per model slice.
+    """
+    aparams = abstract_params(cfg)
+    runs = aparams.get("runs", [])
+    run_bytes = 0.0
+    layers: list[float] = []
+    for (kind, n), run in zip(cfg.runs(), runs):
+        rb = 4.0 * sum(l.size for l in jax.tree.leaves(run))
+        run_bytes += rb
+        layers.extend([rb / n] * n)
+    total = 4.0 * sum(l.size for l in jax.tree.leaves(aparams))
+    return [(total - run_bytes) / model_size] + [b / model_size
+                                                for b in layers]
 
 
 def model_dims_of(params: Any, model_size: int) -> Any:

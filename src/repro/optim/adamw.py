@@ -42,6 +42,25 @@ class OptConfig:
     zero1: bool = True
     # gradient communication: flat | multilevel | multilevel_compress
     comm_mode: str = "multilevel"
+    # size-targeted gradient buckets (wire bytes): sync one fused buffer per
+    # bucket in reverse leaf order instead of per-leaf/monolithic, so the
+    # device scheduler can overlap bucket k's collective with the backward
+    # of the layers below it.  Dense modes only (flat | multilevel): ZeRO-1
+    # scatters per leaf and the compressed mode's EF residual is shaped by
+    # the exchange.
+    bucket_bytes: float | None = None
+
+    def __post_init__(self):
+        if self.bucket_bytes is not None:
+            if self.bucket_bytes <= 0:
+                raise ValueError("bucket_bytes must be positive")
+            if self.comm_mode not in ("flat", "multilevel"):
+                raise ValueError("bucketed gradient sync supports "
+                                 "comm_mode 'flat'/'multilevel' only")
+            if self.sharded_state:
+                raise ValueError("bucketed gradient sync requires "
+                                 "zero1=False (the ZeRO-1 path scatters "
+                                 "per leaf)")
 
     @property
     def error_feedback(self) -> bool:
@@ -219,7 +238,15 @@ def apply_updates(
         # Baseline (topology-unaware) or dense mode: full grads everywhere.
         dp = tuple(a for a in (slow_axis, "data") if a)
         new_ef = opt.get("ef")
-        if cfg.comm_mode == "flat":
+        if cfg.bucket_bytes is not None:
+            # size-targeted buckets in reverse leaf order: one fused
+            # collective per bucket, overlappable with backward
+            from repro.core.collectives import bucketed_psum_tree
+            grads = bucketed_psum_tree(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads),
+                slow_axis, ("data",), bucket_bytes=cfg.bucket_bytes,
+                mode=cfg.comm_mode, mean_over=dp_degree)
+        elif cfg.comm_mode == "flat":
             grads = jax.tree.map(
                 lambda g: lax.psum(g.astype(jnp.float32), dp) / dp_degree, grads)
         elif cfg.error_feedback:

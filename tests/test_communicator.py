@@ -262,6 +262,65 @@ def test_per_call_policy_never_served_stale_plan(fig8):
     assert a1 is not a2
 
 
+def test_stats_counts_hits_misses_evictions_repairs(fig8):
+    """Satellite: Communicator.stats() exposes plan reuse as counters so
+    the engine and benchmarks can ASSERT it instead of timing it."""
+    comm = Communicator(fig8, policy="paper", backend="sim", cache_size=2)
+    comm.bcast(64e3, root=0)
+    comm.bcast(64e3, root=0)
+    st = comm.stats()
+    assert (st.hits, st.misses, st.evictions) == (1, 1, 0)
+    assert st.tree_builds == 1 and st.repairs == 0
+    assert (st.currsize, st.maxsize) == (1, 2)
+    comm.bcast(64e3, root=1)
+    comm.bcast(64e3, root=2)      # capacity 2: evicts the root-0 plan
+    assert comm.stats().evictions == 1
+    comm.bcast(64e3, root=0)      # rebuilt: a miss, not a hit
+    st = comm.stats()
+    assert st.misses == 4 and st.evictions == 2
+    comm.repair(failed=[40])
+    assert comm.stats().repairs == 1
+    comm.repair(failed=[40])      # already gone: not a repair
+    assert comm.stats().repairs == 1
+    # cache_info() keeps its legacy shape
+    ci = comm.cache_info()
+    assert (ci.hits, ci.misses) == (st.hits, st.misses)
+
+
+def test_nbytes_of_pinned_sizing_semantics(fig8):
+    """Satellite: gather/allgather/scatter plans are sized by the PER-RANK
+    contribution.  Scalars already mean that; a device-shaped scatter
+    operand is the root's full [P, ...] buffer and must be divided down,
+    while gather/allgather operands are the local shard (already
+    per-rank)."""
+    import numpy as np
+
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    P = fig8.nprocs
+    # scalars pass through for every sized op
+    for op in ("bcast", "reduce", "allreduce", "gather", "scatter",
+               "allgather"):
+        assert comm._nbytes_of(op, 12345.0) == 12345.0
+    assert comm._nbytes_of("barrier", 999.0) == 0.0
+    assert comm._nbytes_of("bcast", None) == 0.0
+    # device operands: local-shard bytes ...
+    shard = np.zeros((64, 8), np.float32)
+    assert comm._nbytes_of("gather", shard) == shard.nbytes
+    assert comm._nbytes_of("allgather", shard) == shard.nbytes
+    assert comm._nbytes_of("bcast", shard) == shard.nbytes
+    # ... except scatter, whose operand aggregates all P chunks
+    full = np.zeros((P, 64), np.float32)
+    assert comm._nbytes_of("scatter", full) == full.nbytes / P
+    # regression: the aggregate sizing put scatter plans P size-octaves
+    # too high — per-rank sizing must land in the per-chunk bucket
+    from repro.core import size_bucket
+    assert size_bucket(comm._nbytes_of("scatter", full)) == \
+        size_bucket(full.nbytes / P)
+    sub = Communicator(fig8, policy="paper", backend="sim",
+                       members=[0, 1, 2, 16])
+    assert sub._nbytes_of("scatter", np.zeros((4, 10), np.float32)) == 40.0
+
+
 def test_members_subset(fig8):
     members = [0, 1, 2, 16, 17, 32, 33]
     comm = Communicator(fig8, policy="paper", members=members)

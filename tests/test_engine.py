@@ -1,0 +1,373 @@
+"""Async collective engine tests: nonblocking handles, legal interleavings,
+contention-aware scheduling policies, gradient bucketing/overlap, and the
+composition with elastic repair."""
+import math
+
+import pytest
+
+from repro.core import Communicator, Engine
+from repro.core.engine import overlapped_step_times, partition_buckets
+from repro.core.rounds import Lowered, SegSend
+from repro.core.simulator import simulate_concurrent, simulate_rounds
+from repro.core.topology import paper_fig8_topology
+
+
+@pytest.fixture(scope="module")
+def fig8():
+    return paper_fig8_topology()
+
+
+def _one_send(nbytes, src=0, dst=1):
+    """A minimal program: one copy over the (src, dst) edge."""
+    return Lowered("bcast", "tree", src, nbytes, (src, dst), 1, nbytes, 1,
+                   (SegSend(src, dst, nbytes, 0, 0, "copy", True, ()),))
+
+
+# ------------------------------------------------------------------ #
+# Handles: issue / wait / wait_all and result identity.
+# ------------------------------------------------------------------ #
+
+def test_handle_lifecycle(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    h = eng.issue("allreduce", 64e3)
+    assert not h.done
+    res = h.wait()
+    assert h.done and h.wait() is res  # resolved once, cached
+    assert h.started == 0.0 and h.finished == res.time > 0
+    st = eng.stats()
+    assert (st.issued, st.completed, st.batches) == (1, 1, 1)
+    assert eng.now == h.finished
+
+
+def test_single_handle_bit_identical_to_communicator(fig8):
+    """An engine with one live handle prices exactly like the blocking
+    call: the concurrent executor only differs under actual contention."""
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    blocking = comm.allreduce(1 << 22).completion
+    eng = Engine(comm)
+    assert eng.issue("allreduce", float(1 << 22)).wait().completion \
+        == blocking
+
+
+def test_wait_all_returns_batch_in_issue_order(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    hs = [eng.issue("bcast", 1e3 * (i + 1), root=0) for i in range(3)]
+    out = eng.wait_all()
+    assert out == [h.result for h in hs]
+    assert eng.wait_all() == []  # nothing pending: no-op
+
+
+def test_issue_validation(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim",
+                        members=[0, 1, 2, 3])
+    eng = Engine(comm)
+    with pytest.raises(KeyError):
+        eng.issue("alltoall", 1e3)
+    with pytest.raises(ValueError, match="not a member"):
+        eng.issue("bcast", 1e3, root=17)
+    with pytest.raises(ValueError, match="not members"):
+        eng.issue("bcast", 1e3, members=[0, 17])
+    with pytest.raises(ValueError, match="unknown policy"):
+        Engine(comm, policy="lifo")
+    other = Engine(comm)
+    h = other.issue("bcast", 1e3)
+    with pytest.raises(ValueError, match="different engine"):
+        eng.wait(h)
+    with pytest.raises(ValueError, match="different engine"):
+        eng.issue("bcast", 1e3, after=[h])
+
+
+# ------------------------------------------------------------------ #
+# Legal interleavings: per-member-set FIFO + explicit dependencies.
+# ------------------------------------------------------------------ #
+
+def test_same_member_set_is_fifo(fig8):
+    """Two collectives on the same member set never overlap: the second
+    starts only when the first has completed on every rank."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    h1 = eng.issue("allreduce", 1e6)
+    h2 = eng.issue("allreduce", 1e6)
+    eng.wait_all()
+    assert h2.started == h1.finished
+    assert min(h2.result.completion.values()) >= h1.finished
+
+
+def test_fifo_holds_across_batches(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    h1 = eng.issue("bcast", 1e6, root=0)
+    eng.wait_all()
+    h2 = eng.issue("bcast", 1e6, root=0, at=0.0)  # release BEFORE h1 ends
+    eng.wait_all()
+    assert h2.started >= h1.finished
+
+
+def test_explicit_dependency_orders_disjoint_sets(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    left, right = tuple(range(16)), tuple(range(16, 32))
+    eng = Engine(comm)
+    a = eng.issue("bcast", 1e6, root=0, members=left)
+    b = eng.issue("bcast", 1e6, root=16, members=right, after=[a])
+    eng.wait_all()
+    assert b.started >= a.finished
+    # a resolved dependency contributes a release floor, not a chain
+    c = eng.issue("bcast", 1e6, root=0, members=left, at=0.0, after=[b])
+    c.wait()
+    assert c.started >= b.finished
+
+
+def test_disjoint_member_sets_overlap_and_price_as_isolated(fig8):
+    """Satellite: K plans on link-disjoint subtrees simulate to the SAME
+    per-plan times as isolated runs — concurrency costs nothing when no
+    link is shared."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    sets = [tuple(range(16)), tuple(range(16, 32)), tuple(range(32, 48))]
+    eng = Engine(comm)
+    hs = [eng.issue("bcast", 1e6, root=s[0], members=s) for s in sets]
+    eng.wait_all()
+    for s, h in zip(sets, hs):
+        iso = Communicator(fig8, policy="paper", backend="sim",
+                           members=s).bcast(1e6, root=s[0])
+        assert h.result.completion == iso.completion
+    # genuinely concurrent: makespan is one plan's time, not three
+    assert eng.now == max(h.finished for h in hs)
+    assert eng.now < 2 * min(h.finished for h in hs)
+
+
+# ------------------------------------------------------------------ #
+# Contention conservation on a shared link.
+# ------------------------------------------------------------------ #
+
+def test_shared_link_fair_share_bound(fig8):
+    """Satellite: K plans through one link never exceed its bandwidth —
+    the last finisher waits at least total_bytes/bandwidth — and complete
+    no earlier than the fair-share bound."""
+    N, K = 1e6, 4
+    lvl = fig8.level_of_edge(0, 1)
+    res = simulate_concurrent([_one_send(N) for _ in range(K)], fig8)
+    finishes = [max(r.values()) for r in res]
+    iso = max(simulate_rounds(_one_send(N), fig8).values())
+    assert all(f >= iso for f in finishes)          # never beats isolation
+    assert max(finishes) >= K * N / lvl.bandwidth   # bandwidth conserved
+    # symmetric release, identical programs: fair share finishes together
+    assert max(finishes) - min(finishes) < 1e-12
+    assert max(finishes) == pytest.approx(
+        K * N / lvl.bandwidth + lvl.latency, rel=1e-9)
+
+
+def test_staggered_release_shares_then_drains(fig8):
+    """A transfer released halfway through another's flow halves the rate
+    from that instant: 1 MB alone takes T; two offset by T/2 finish at
+    1.5T and 2T (bandwidth terms)."""
+    N = 1e6
+    lvl = fig8.level_of_edge(0, 1)
+    T = N / lvl.bandwidth
+    res = simulate_concurrent([_one_send(N), _one_send(N)], fig8,
+                              starts=[0.0, T / 2])
+    f0 = max(res[0].values()) - lvl.latency
+    f1 = max(res[1].values()) - lvl.latency
+    assert f0 == pytest.approx(1.5 * T, rel=1e-9)
+    assert f1 == pytest.approx(2.0 * T, rel=1e-9)
+
+
+# ------------------------------------------------------------------ #
+# Scheduler policies.
+# ------------------------------------------------------------------ #
+
+def _mixed_batch(eng):
+    """A fat broadcast whose first WAN transfer occupies edge (0, 16) for
+    ~54 s, plus small latency-bound collectives that need that same edge."""
+    fat = eng.issue("bcast", float(1 << 26), root=0)
+    small = [eng.issue("bcast", 64e3, root=0, members=(0, 16))
+             for _ in range(3)]
+    return fat, small
+
+
+def test_priority_small_jumps_fat(fig8):
+    """Under "priority", latency-bound collectives preempt the fat
+    transfer on shared links instead of fair-sharing its whole lifetime."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    lat = {}
+    for policy in ("fifo", "priority"):
+        eng = Engine(comm, policy=policy)
+        fat, small = _mixed_batch(eng)
+        eng.wait_all()
+        lat[policy] = (max(h.finished for h in small), fat.finished)
+    assert lat["priority"][0] < lat["fifo"][0]  # small ops finish earlier
+    # the fat transfer pays at most the small ops' bytes, not a 2x stall
+    assert lat["priority"][1] < lat["fifo"][1] * 1.5
+
+
+def test_sim_policy_argmin_beats_or_matches_both(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    spans = {}
+    for policy in ("fifo", "priority", "sim"):
+        eng = Engine(comm, policy=policy)
+        _mixed_batch(eng)
+        eng.wait_all()
+        spans[policy] = eng.now
+        if policy == "sim":
+            assert eng.stats().last_policy.startswith("sim:")
+    assert spans["sim"] <= min(spans["fifo"], spans["priority"]) + 1e-12
+
+
+def test_policy_override_per_wait(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm, policy="fifo")
+    _mixed_batch(eng)
+    eng.wait_all(policy="priority")
+    assert eng.stats().last_policy == "priority"
+    with pytest.raises(ValueError, match="unknown policy"):
+        eng.issue("bcast", 1e3)
+        eng.wait_all(policy="lifo")
+
+
+# ------------------------------------------------------------------ #
+# Plan reuse: asserted via Communicator.stats(), not timing.
+# ------------------------------------------------------------------ #
+
+def test_engine_reuses_plans_across_batches(fig8):
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    for _ in range(4):
+        eng.issue("allreduce", 8e6)
+        eng.wait_all()
+    st = comm.stats()
+    assert st.misses == 1 and st.hits == 3
+    assert st.evictions == 0
+    # subset traffic reuses per-subset plans the same way
+    sub = tuple(range(16))
+    for _ in range(3):
+        eng.issue("bcast", 8e6, root=0, members=sub)
+        eng.wait_all()
+    subcomm = eng._subcomms[sub]
+    assert subcomm.stats().misses == 1 and subcomm.stats().hits == 2
+
+
+# ------------------------------------------------------------------ #
+# Gradient bucketing + overlap.
+# ------------------------------------------------------------------ #
+
+def test_partition_buckets():
+    sizes = [10.0, 20.0, 30.0, 40.0]
+    # reverse (backward) order, 50-byte target
+    assert partition_buckets(sizes, 50.0) == [[3, 2], [1, 0]]
+    assert partition_buckets(sizes, 1000.0) == [[3, 2, 1, 0]]
+    assert partition_buckets(sizes, 5.0) == [[3], [2], [1], [0]]
+    assert partition_buckets(sizes, 50.0, reverse=False) == [[0, 1, 2], [3]]
+    with pytest.raises(ValueError, match="positive"):
+        partition_buckets(sizes, 0.0)
+
+
+def test_overlapped_step_beats_serial_1p5x_at_64mib(fig8):
+    """THE acceptance criterion: the bucketed, overlapped fig8 training
+    step is >= 1.5x faster end-to-end than the serial monolithic sync at
+    64 MiB of gradients (balanced compute — the communication-bound
+    threshold where overlap matters most)."""
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    L = 12
+    layer_bytes = [float(1 << 26) / L] * L
+    t_comm = comm.allreduce(float(1 << 26)).time
+    res = overlapped_step_times(comm, layer_bytes, [t_comm / L] * L,
+                                bucket_bytes=8 * float(1 << 20))
+    assert res["serial_s"] == pytest.approx(2 * t_comm, rel=1e-6)
+    assert res["speedup"] >= 1.5, res
+    assert 0.0 < res["overlap_efficiency"] <= 1.0
+    # overlap hides work, it never invents it
+    assert res["compute_s"] <= res["overlapped_s"] <= res["serial_s"]
+
+
+def test_overlap_degenerates_gracefully(fig8):
+    """One giant bucket = no overlap: the 'overlapped' step collapses to
+    the serial one (sync starts only after the full backward)."""
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    layer_bytes = [1e6] * 4
+    res = overlapped_step_times(comm, layer_bytes, [0.05] * 4,
+                                bucket_bytes=1e9)
+    assert res["n_buckets"] == 1
+    assert res["overlapped_s"] == pytest.approx(res["serial_s"], rel=5e-2)
+    with pytest.raises(ValueError, match="align"):
+        overlapped_step_times(comm, [1e6], [0.1, 0.2], bucket_bytes=1e6)
+
+
+# ------------------------------------------------------------------ #
+# Elastic interop: failure during overlap.
+# ------------------------------------------------------------------ #
+
+def test_repair_reissues_pending_drains_flushed(fig8):
+    """Satellite: Communicator.repair composes with the engine — handles
+    already resolved DRAIN (results stand), pending handles are RE-ISSUED
+    on the repaired plans with dead ranks removed and dead roots
+    replaced."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    done = eng.issue("allreduce", 1e6)
+    eng.wait_all()
+    drained = done.result
+    pending = eng.issue("bcast", 1e6, root=16)     # root dies below
+    sub = eng.issue("bcast", 1e6, root=16, members=tuple(range(16, 32)))
+    rep = eng.repair(failed=range(16, 24))
+    assert rep.failed == tuple(range(16, 24))
+    assert eng.stats().replanned == 2
+    assert done.result is drained                   # drained, untouched
+    assert pending.root == 0                        # dead root replaced
+    assert not set(pending.members) & set(rep.failed)
+    assert sub.members == tuple(range(24, 32)) and sub.root == 24
+    for r in eng.wait_all([pending, sub]):
+        assert all(math.isfinite(t) for t in r.completion.values())
+        assert not set(r.completion) & set(rep.failed)
+
+
+def test_repair_losing_every_member_raises_atomically(fig8):
+    """A doomed handle aborts the whole repair BEFORE anything mutates:
+    the communicator keeps its members and other pending handles keep
+    theirs (no half-repaired engine)."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    other = eng.issue("allreduce", 1e3)
+    eng.issue("bcast", 1e3, root=16, members=tuple(range(16, 24)))
+    with pytest.raises(ValueError, match="lose every member"):
+        eng.repair(failed=range(16, 24))
+    assert comm.members == tuple(range(fig8.nprocs))  # untouched
+    assert other.members == comm.members
+    assert comm.stats().repairs == 0
+
+
+def test_subset_scatter_sized_by_subset_member_count(fig8):
+    """Regression: issue() sized a subset scatter's device operand by the
+    PARENT communicator's member count (48) instead of the subset's,
+    undershooting the per-rank chunk ~12x (wrong size bucket, wrong
+    default priority)."""
+    import numpy as np
+
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm)
+    sub = (0, 1, 2, 16)
+    full = np.zeros((4, 10), np.float32)  # the root's [P, ...] buffer
+    h = eng.issue("scatter", full, root=0, members=sub)
+    assert h.nbytes == full.nbytes / len(sub)
+    # gather operands are already per-rank: no division
+    g = eng.issue("gather", np.zeros((7,), np.float32), root=0, members=sub)
+    assert g.nbytes == 28.0
+
+
+def test_sim_policy_started_reflects_executed_schedule(fig8):
+    """Regression: under "sim", Handle.started was computed from the
+    pre-candidate dependency sets — a serial-chained winner reported
+    handles as started at release although they queued behind the chain."""
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    eng = Engine(comm, policy="sim")
+    hs = [eng.issue("allreduce", 1e6, members=tuple(range(16 * i, 16 * i + 16)))
+          for i in range(2)]
+    eng.wait_all()
+    chosen = eng.stats().last_policy
+    if chosen in ("sim:serial", "sim:serial-sjf"):
+        first, second = (hs if chosen == "sim:serial" else
+                         sorted(hs, key=lambda h: h.nbytes))
+        assert second.started >= first.finished
+    for h in hs:  # started is always consistent with the handle's own times
+        assert h.started <= h.finished
+        assert h.started >= 0.0

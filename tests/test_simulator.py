@@ -206,3 +206,75 @@ def test_probe_time_is_postal_one_way():
     assert lvl.name == "wan"
     assert probe_time(topo, 0, 47, 1e6) == pytest.approx(
         lvl.overhead + lvl.latency + 1e6 / lvl.bandwidth)
+
+
+# ------------------------------------------------------------------ #
+# The concurrent executor (engine substrate): single-program results must
+# stay BIT-identical to the linear-pass executor, for every plan family.
+# ------------------------------------------------------------------ #
+
+def test_concurrent_single_program_bit_identical(fig8):
+    """simulate_rounds([plan]) — the contention path with one live program
+    — reproduces simulate_rounds(plan) exactly: == on every float, across
+    tree/sag/rsag, segmented and not."""
+    from repro.core import Communicator
+    from repro.core.simulator import simulate_rounds
+
+    comm = Communicator(fig8, policy="auto", backend="sim")
+    for op, nb in [("bcast", 64e3), ("bcast", float(1 << 26)),
+                   ("allreduce", 8e3), ("allreduce", float(1 << 26)),
+                   ("gather", 16e3), ("scatter", 4e3),
+                   ("allgather", 4e3), ("reduce", 256e3)]:
+        low = comm.plan(op, root=0, nbytes=nb).lower(nb)
+        assert simulate_rounds([low], fig8)[0] == simulate_rounds(low, fig8), \
+            (op, nb)
+    # a non-zero start offset shifts both executors identically
+    low = comm.plan("allreduce", root=0, nbytes=64e3).lower(64e3)
+    assert simulate_rounds([low], fig8, start=1.5)[0] \
+        == simulate_rounds(low, fig8, start=1.5)
+
+
+def test_concurrent_rejects_fail_at_and_bad_deps(fig8):
+    from repro.core import Communicator
+    from repro.core.simulator import simulate_concurrent, simulate_rounds
+
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    low = comm.plan("bcast", root=0, nbytes=1e3).lower(1e3)
+    with pytest.raises(ValueError, match="fail_at"):
+        simulate_rounds([low], fig8, fail_at={3: 0.0})
+    with pytest.raises(ValueError, match="dependency"):
+        simulate_concurrent([low], fig8, deps={0: [0]})  # self-dep
+    with pytest.raises(ValueError, match="never completed"):
+        simulate_concurrent([low, low], fig8, deps={0: [1], 1: [0]})
+    with pytest.raises(ValueError, match="start times"):
+        simulate_concurrent([low], fig8, starts=[0.0, 1.0])
+
+
+def test_concurrent_link_disjoint_programs_price_as_isolated(fig8):
+    """Conservation satellite, simulator plane: programs over disjoint
+    subtrees couple through nothing — per-plan completions equal the
+    isolated runs bit-for-bit."""
+    from repro.core import Communicator
+    from repro.core.simulator import simulate_concurrent, simulate_rounds
+
+    lows = []
+    for lo in (0, 16, 32):
+        sub = Communicator(fig8, policy="paper", backend="sim",
+                           members=list(range(lo, lo + 16)))
+        lows.append(sub.plan("allreduce", root=lo, nbytes=1e6).lower(1e6))
+    out = simulate_concurrent(lows, fig8)
+    for low, got in zip(lows, out):
+        assert got == simulate_rounds(low, fig8)
+
+
+def test_concurrent_program_deps_serialize(fig8):
+    """deps={j: [i]} releases j only when i has completed on EVERY rank."""
+    from repro.core import Communicator
+    from repro.core.simulator import simulate_concurrent
+
+    comm = Communicator(fig8, policy="paper", backend="sim")
+    low = comm.plan("allreduce", root=0, nbytes=1e6).lower(1e6)
+    free = simulate_concurrent([low, low], fig8)
+    chained = simulate_concurrent([low, low], fig8, deps={1: [0]})
+    assert min(chained[1].values()) >= max(chained[0].values())
+    assert max(chained[1].values()) > max(free[1].values())
