@@ -1,0 +1,212 @@
+"""Serving benchmark: latency/throughput frontier under open-loop load,
+persisted to ``BENCH_serve.json`` at the repo root.
+
+The serving stack (``repro.serving``) runs with the token-fabricating
+``SimExecutor`` — the sweep measures *scheduling and memory policy*, not
+model quality — over the paper fig8 topology: per-request decode gathers on
+tensor-parallel replica groups contend with a periodic fat weight broadcast
+on the shared multilevel network, priced by the priority engine.
+
+Three sections:
+
+``frontier``
+    Offered load (Poisson, open-loop) swept across rates x scheduler
+    policies (fifo / priority / slo): p50/p99 TTFT, per-token latency,
+    goodput, shed count.  Past saturation, fifo's queue grows without bound
+    (p99 TTFT tracks the horizon) while slo sheds late requests and keeps
+    the served tail inside the deadline.
+``capacity``
+    Paged vs dense KV at an equal block budget: dense reserves the
+    worst-case ceil(s_max/block) blocks per request at admission, paged
+    allocates on demand — max concurrent requests before OOM/shed is the
+    paper number for paged attention.
+``headline``
+    Acceptance: (a) paged max concurrency strictly above dense at equal
+    memory; (b) at >= 1 overload operating point slo beats fifo on p99 TTFT.
+
+``--smoke`` runs a reduced sweep and checks the committed artifact's schema
+instead of overwriting it (see ``bench_schema.py``); CI runs this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import Communicator
+from repro.core.engine import Engine
+from repro.core.topology import paper_fig8_topology
+from repro.serving import (Scheduler, SimExecutor, SLO, make_requests,
+                           poisson_arrivals, bursty_arrivals,
+                           default_compute_model)
+
+# modeled serving deployment: 1B params on a TP-8 replica, fig8 network
+N_PARAMS = 1e9
+FLOPS_PER_S = 2e12          # per-step roofline -> ~1 ms per 1k tokens
+TP = 8
+D_MODEL = 4096
+BLOCK = 16
+S_MAX = 256
+WEIGHT_BYTES = float(1 << 26)   # 64 MiB delta bcast, every BCAST_EVERY steps
+BCAST_EVERY = 64
+HORIZON_S = 4.0
+SLO_SPEC = SLO(ttft_s=0.3, tpot_s=0.05)
+
+RATES = (10.0, 20.0, 40.0, 80.0)
+SMOKE_RATES = (10.0, 40.0)
+
+
+def _replicas(n_ranks: int = 48) -> list[tuple[int, ...]]:
+    return [tuple(range(g * TP, (g + 1) * TP)) for g in range(n_ranks // TP)]
+
+
+def _scheduler(policy: str, mode: str, comm, *, n_blocks: int,
+               max_slots: int) -> Scheduler:
+    eng = Engine(comm, policy="fifo" if policy == "fifo" else "priority",
+                 age_rate=WEIGHT_BYTES)
+    return Scheduler(
+        SimExecutor(block_size=BLOCK), n_blocks=n_blocks, block_size=BLOCK,
+        max_slots=max_slots, s_max=S_MAX, policy=policy, mode=mode,
+        prefill_token_budget=256,
+        compute_model=default_compute_model(N_PARAMS,
+                                            flops_per_s=FLOPS_PER_S),
+        engine=eng, replicas=_replicas(),
+        weight_bytes=WEIGHT_BYTES, gather_bytes=D_MODEL * 2.0 / TP,
+        bcast_every=BCAST_EVERY)
+
+
+def frontier(comm, rates, arrival="poisson") -> list[dict]:
+    rows = []
+    gen = poisson_arrivals if arrival == "poisson" else bursty_arrivals
+    for rate in rates:
+        arr = gen(rate, HORIZON_S, seed=1)
+        for policy in ("fifo", "priority", "slo"):
+            reqs = make_requests(arr, vocab=512, prompt_len=(16, 48),
+                                 gen_len=(8, 24), slo=SLO_SPEC, seed=2)
+            sch = _scheduler(policy, "paged", comm,
+                             n_blocks=1 + 8 * (S_MAX // BLOCK), max_slots=8)
+            w0 = time.perf_counter()
+            rep = sch.run(reqs)
+            wall = time.perf_counter() - w0
+            s = rep.summary()
+            rows.append({
+                "arrival": arrival, "offered_rate_req_s": rate,
+                "policy": policy, **s, "sched_wall_s": wall,
+            })
+    return rows
+
+
+def capacity(comm, rate: float = 40.0) -> list[dict]:
+    """Equal block budget, paged vs dense admission accounting."""
+    n_blocks = 1 + 3 * (S_MAX // BLOCK)   # dense fits exactly 3 requests
+    rows = []
+    arr = poisson_arrivals(rate, HORIZON_S, seed=1)
+    for mode in ("paged", "dense"):
+        reqs = make_requests(arr, vocab=512, prompt_len=(16, 48),
+                             gen_len=(8, 24), seed=2)
+        sch = _scheduler("fifo", mode, comm, n_blocks=n_blocks, max_slots=16)
+        rep = sch.run(reqs)
+        s = rep.summary()
+        rows.append({
+            "mode": mode, "n_blocks": n_blocks, "block_size": BLOCK,
+            "s_max": S_MAX, "offered_rate_req_s": rate, **s,
+        })
+    return rows
+
+
+def summarize(front, cap) -> tuple[dict, list[str]]:
+    out = []
+    by_cap = {r["mode"]: r for r in cap}
+    pg, dn = by_cap["paged"], by_cap["dense"]
+    out.append(
+        f"capacity (equal {pg['n_blocks']} blocks): paged sustains "
+        f"{pg['max_concurrent']} concurrent requests vs {dn['max_concurrent']} "
+        f"dense; p99 TTFT {pg['ttft_p99_s']:.3f}s vs {dn['ttft_p99_s']:.3f}s")
+    slo_wins = []
+    for rate in sorted({r["offered_rate_req_s"] for r in front}):
+        by = {r["policy"]: r for r in front
+              if r["offered_rate_req_s"] == rate}
+        f9, s9 = by["fifo"]["ttft_p99_s"], by["slo"]["ttft_p99_s"]
+        overload = f9 > SLO_SPEC.ttft_s
+        if overload and s9 < f9:
+            slo_wins.append(rate)
+        out.append(
+            f"rate {rate:g}/s: p99 TTFT fifo {f9:.3f}s / priority "
+            f"{by['priority']['ttft_p99_s']:.3f}s / slo {s9:.3f}s "
+            f"(shed {by['slo']['n_shed']}/{by['slo']['n_requests']})"
+            + (" <- overload" if overload else ""))
+    headline = {
+        "paged_max_concurrent": pg["max_concurrent"],
+        "dense_max_concurrent": dn["max_concurrent"],
+        "paged_beats_dense": pg["max_concurrent"] > dn["max_concurrent"],
+        "slo_win_rates": slo_wins,
+        "slo_beats_fifo_under_overload": bool(slo_wins),
+        "passed": (pg["max_concurrent"] > dn["max_concurrent"]
+                   and bool(slo_wins)),
+    }
+    out.append(
+        f"headline: paged {pg['max_concurrent']} > dense "
+        f"{dn['max_concurrent']} concurrent at equal memory "
+        f"({'PASS' if headline['paged_beats_dense'] else 'FAIL'}); slo p99 "
+        f"TTFT beats fifo at overload rates {slo_wins or 'NONE'} "
+        f"({'PASS' if headline['slo_beats_fifo_under_overload'] else 'FAIL'})")
+    return headline, out
+
+
+def build_doc(smoke: bool = False) -> dict:
+    comm = Communicator(paper_fig8_topology(), backend="sim", policy="paper")
+    rates = SMOKE_RATES if smoke else RATES
+    front = frontier(comm, rates)
+    front += frontier(comm, (rates[-1],), arrival="bursty")
+    cap = capacity(comm)
+    headline, summary = summarize(front, cap)
+    return {
+        "generated_by": "benchmarks/bench_serve.py",
+        "deployment": {
+            "n_params": N_PARAMS, "flops_per_s": FLOPS_PER_S, "tp": TP,
+            "block_size": BLOCK, "s_max": S_MAX,
+            "weight_bcast_bytes": WEIGHT_BYTES, "bcast_every": BCAST_EVERY,
+            "horizon_s": HORIZON_S, "slo_ttft_s": SLO_SPEC.ttft_s,
+            "slo_tpot_s": SLO_SPEC.tpot_s, "topology": "fig8",
+        },
+        "frontier": front,
+        "capacity": cap,
+        "headline": headline,
+        "summary": summary,
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_serve.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        if not doc["headline"]["passed"]:
+            print("serve acceptance failed: paged>dense concurrency and "
+                  "slo<fifo p99 TTFT must both hold", file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_serve.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_serve.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

@@ -29,6 +29,11 @@ exactly as far as the fluid postal model says they must.
     Strict-priority link arbitration: small/latency-bound collectives
     (default priority ``-nbytes``) preempt fat transfers on shared links
     instead of halving their bandwidth for the fat transfer's whole
+    lifetime.  ``age_rate`` bounds starvation: a preempted transfer's
+    effective priority rises by ``age_rate`` per second of waiting (from
+    its release time), so a fat broadcast under a sustained stream of
+    small high-priority ops eventually outranks newly released ones and
+    completes — strict priority would starve it for the stream's whole
     lifetime.
 ``"sim"``
     Candidate orderings (fair, priority, serial issue-order, serial
@@ -129,12 +134,15 @@ class Engine:
     """
 
     def __init__(self, comm: Communicator, *, policy: str = "fifo",
-                 now: float = 0.0):
+                 now: float = 0.0, age_rate: float = 0.0):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
+        if age_rate < 0:
+            raise ValueError("age_rate must be >= 0")
         self.comm = comm
         self.policy = policy
+        self.age_rate = float(age_rate)
         self.now = float(now)
         self._pending: list[Handle] = []
         self._hid = itertools.count()
@@ -256,6 +264,8 @@ class Engine:
 
         prios = [h.priority if h.priority is not None else -h.nbytes
                  for h in batch]
+        if self.age_rate:
+            prios = [(p, self.age_rate) for p in prios]
         topo = self.comm.topo
 
         def run(deps, priorities):

@@ -240,6 +240,16 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
       priority: only the highest-priority transfers active on the link
       flow, lower ones stall until the link clears.  Equal priorities
       share fairly.  ``None`` means all-fair.
+    * An entry may also be a ``(base, age_rate)`` pair: the program's
+      effective priority at time t is ``base + age_rate * (t - release)``
+      — a preempted transfer decays toward the front of the link the
+      longer it waits (bounded starvation).  With one shared ``age_rate``
+      the pairwise differences are CONSTANT in time (both grow at the
+      same slope), so link eligibility can only flip at join/drain
+      events, which the fluid executor already processes — no extra
+      crossover events are needed.  (Heterogeneous rates are legal but
+      re-evaluated only at link events.)  ``age_rate == 0`` is exactly
+      the static-priority behaviour.
 
     Latency and sender/receiver overheads stay per-message quantities
     (charged once at flow end for ``first`` sends), and reduce messages
@@ -260,7 +270,22 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
     for j, ds in enumerate(pdeps):
         if any(d == j or not 0 <= d < K for d in ds):
             raise ValueError(f"bad program dependency list for #{j}: {ds}")
-    prio = list(priorities) if priorities is not None else None
+    if priorities is None:
+        prio = age = None
+    else:
+        prio, age = [], []
+        for p in priorities:
+            if isinstance(p, tuple):
+                base, rate = p
+                if rate < 0:
+                    raise ValueError("priority age_rate must be >= 0")
+                prio.append(float(base))
+                age.append(float(rate))
+            else:
+                prio.append(float(p))
+                age.append(0.0)
+        if not any(age):
+            age = None
 
     # -- flatten the programs into one transfer table ------------------- #
     off = [0]
@@ -345,8 +370,16 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
         if prio is None:
             elig = xs
         else:
-            top = max(prio[prog_of[x]] for x in xs)
-            elig = [x for x in xs if prio[prog_of[x]] == top]
+            if age is None:
+                eff = prio
+            else:
+                # aged priority: differences are time-invariant under a
+                # shared rate, so evaluating at `now` is exact for the
+                # whole inter-event interval
+                eff = [prio[j] + age[j] * (now - rel[j])
+                       for j in range(len(prio))]
+            top = max(eff[prog_of[x]] for x in xs)
+            elig = [x for x in xs if eff[prog_of[x]] == top]
         bw = lvl_of[xs[0]].bandwidth
         each = bw / len(elig)
         for x in xs:

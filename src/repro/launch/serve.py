@@ -1,5 +1,5 @@
-"""Serving driver: batched prefill + decode with a continuous-batching-style
-request queue, using the multilevel tree broadcast for weight distribution.
+"""Serving driver: continuous batching over a paged KV cache, with the
+multilevel engine pricing per-request collectives against weight broadcasts.
 
 CPU demo:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -17,55 +17,35 @@ from repro import compat
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch import step as STEP
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, mesh_communicator
 from repro.models import transformer as T
+from repro.serving import (JaxExecutor, Scheduler, SLO, make_requests,
+                           poisson_arrivals, default_compute_model)
 
 
-def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
-          mesh_spec: str = "1x2x2", smoke: bool = True) -> dict:
-    cfg = get_config(arch, smoke=smoke)
-    pods, data, model = (int(x) for x in mesh_spec.split("x"))
-    mesh = make_test_mesh(pods, data, model)
-    s_max = prompt_len + gen_len
+def _weight_bytes(params) -> float:
+    return float(sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree.leaves(params)))
 
-    params = T.init_model(jax.random.PRNGKey(0), cfg)
-    from repro.models.sharding import param_shardings
-    params = jax.device_put(params, param_shardings(params, mesh))
 
-    # Weight-distribution plan through the single collectives entry point:
-    # the multilevel tree broadcast of updated params crosses each slow link
-    # exactly once (paper §3.2); on a one-host demo we surface the plan and
-    # its postal-model estimate rather than shipping real bytes.
-    from repro.launch.mesh import mesh_communicator
-    wcomm = mesh_communicator(mesh, backend="sim", policy="paper")
-    wbytes = float(sum(np.prod(l.shape) * l.dtype.itemsize
-                       for l in jax.tree.leaves(params)))
-    print(f"[serve] {wcomm.describe()}; weight bcast "
-          f"({wbytes/1e6:.1f} MB): est "
-          f"{wcomm.bcast(wbytes, root=0).time*1e3:.2f} ms, "
-          f"{wcomm.slow_crossings('bcast', nbytes=wbytes)} slow-link "
-          f"crossing(s)")
-
-    # Concurrent traffic through the async engine: the fat weight broadcast
-    # and every request's (tensor-parallel) activation gather live on the
-    # network AT ONCE; under the "priority" policy the small per-request
-    # collectives preempt the broadcast on shared links instead of stalling
-    # behind it.  Requests land round-robin on the data-parallel replicas.
+def _engine_demo(wcomm, wbytes: float, cfg, prompt_len: int, model: int,
+                 replicas: list, n_requests: int) -> None:
+    """Price 1 weight bcast + N request gathers under fifo vs priority."""
     from repro.core.engine import Engine
-    replicas = [tuple(range(g * model, (g + 1) * model))
-                for g in range(pods * data)]
-    req_bytes = float(prompt_len * cfg.d_model * 2)  # bf16 activations
+    act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    req_bytes = float(prompt_len * cfg.d_model * act_itemsize)
     lat = {}
     for policy in ("fifo", "priority"):
-        eng = Engine(wcomm, policy=policy)
+        eng = Engine(wcomm, policy=policy, age_rate=wbytes)
         eng.issue("bcast", wbytes, root=0)
+        issue_t = eng.now
         reqs = [eng.issue("allgather", req_bytes / model,
                           members=replicas[r % len(replicas)], priority=1.0)
                 for r in range(n_requests)]
         eng.wait_all()
-        lat[policy] = (eng.now,
-                       sum(h.finished for h in reqs) / max(len(reqs), 1))
+        mean_lat = (sum(h.finished - issue_t for h in reqs)
+                    / max(len(reqs), 1))
+        lat[policy] = (eng.now, mean_lat)
     serial = wcomm.bcast(wbytes, root=0).time + sum(
         Engine(wcomm).issue("allgather", req_bytes / model,
                             members=replicas[r % len(replicas)]).wait().time
@@ -76,30 +56,86 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
           f"{lat['priority'][1]*1e3:.3f} ms (priority) vs "
           f"{lat['fifo'][1]*1e3:.3f} ms (fifo)")
 
-    prefill = STEP.make_prefill_step(cfg, mesh, s_max)
-    decode = STEP.make_decode_step(cfg, mesh)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, (n_requests, prompt_len)).astype(np.int32)
+def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
+          mesh_spec: str = "1x2x2", smoke: bool = True, *,
+          policy: str = "priority", block_size: int = 8,
+          rate: float | None = None) -> dict:
+    """Run ``n_requests`` through the continuous-batching scheduler on a
+    host-device demo mesh (paged KV cache, real greedy decoding).
+
+    ``rate``: open-loop Poisson arrival rate (req/s of *simulation* time);
+    default: all requests arrive at t=0 (closed batch)."""
+    cfg = get_config(arch, smoke=smoke)
+    pods, data, model = (int(x) for x in mesh_spec.split("x"))
+    mesh = make_test_mesh(pods, data, model)
+    s_max = prompt_len + gen_len
+    s_max += (-s_max) % block_size
+
+    params_probe = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    wbytes = _weight_bytes(params_probe)
+
+    # Weight-distribution plan through the single collectives entry point:
+    # the multilevel tree broadcast of updated params crosses each slow link
+    # exactly once (paper §3.2); on a one-host demo we surface the plan and
+    # its postal-model estimate rather than shipping real bytes.
+    wcomm = mesh_communicator(mesh, backend="sim", policy="paper")
+    print(f"[serve] {wcomm.describe()}; weight bcast "
+          f"({wbytes/1e6:.1f} MB): est "
+          f"{wcomm.bcast(wbytes, root=0).time*1e3:.2f} ms, "
+          f"{wcomm.slow_crossings('bcast', nbytes=wbytes)} slow-link "
+          f"crossing(s)")
+
+    replicas = [tuple(range(g * model, (g + 1) * model))
+                for g in range(pods * data)]
+    _engine_demo(wcomm, wbytes, cfg, prompt_len, model, replicas, n_requests)
+
+    # Continuous batching: requests join/leave the running batch per step;
+    # KV lives in on-demand blocks; each step's decode gathers are priced
+    # against the periodic weight broadcast by the priority engine.
+    from repro.core.engine import Engine
+    max_slots = min(n_requests, 8)
+    n_blocks = 1 + max_slots * (s_max // block_size)
+    ex = JaxExecutor(cfg, mesh, n_blocks=n_blocks, block_size=block_size,
+                     max_slots=max_slots, max_blocks=s_max // block_size)
+    act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    eng = Engine(wcomm, policy="fifo" if policy == "fifo" else "priority",
+                 age_rate=wbytes)
+    sch = Scheduler(
+        ex, n_blocks=n_blocks, block_size=block_size, max_slots=max_slots,
+        s_max=s_max, policy=policy, prefill_token_budget=4 * prompt_len,
+        compute_model=default_compute_model(cfg.active_param_count(),
+                                            model_size=model),
+        engine=eng, replicas=replicas,
+        weight_bytes=wbytes,
+        gather_bytes=float(cfg.d_model * act_itemsize) / model,
+        bcast_every=16)
+
+    if rate is None:
+        arrivals = [0.0] * n_requests
+    else:
+        arrivals = poisson_arrivals(rate, n_requests / rate, seed=0)[:n_requests]
+        arrivals += [n_requests / rate] * (n_requests - len(arrivals))
+    reqs = make_requests(arrivals, vocab=cfg.vocab, prompt_len=prompt_len,
+                         gen_len=gen_len, slo=SLO(), seed=0)
 
     t0 = time.monotonic()
-    inputs = {"tokens": jnp.asarray(prompts)}
-    if cfg.enc_dec:
-        inputs["src_embeds"] = jnp.zeros((n_requests, prompt_len, cfg.d_model),
-                                         jnp.bfloat16)
     with compat.set_mesh(mesh):
-        logits, cache, pos = prefill(params, inputs)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out_tokens = [np.asarray(tok)]
-        p = jnp.int32(pos)
-        for i in range(gen_len - 1):
-            logits, cache = decode(params, cache, tok, p + i)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out_tokens.append(np.asarray(tok))
+        report = sch.run(reqs)
     dt = time.monotonic() - t0
-    gen = np.concatenate(out_tokens, axis=1)
+    gen = np.stack([np.asarray(r.tokens, np.int32)
+                    for r in sorted(reqs, key=lambda r: r.rid)])
+    s = report.summary()
+    print(f"[serve] {s['n_done']}/{s['n_requests']} done "
+          f"({s['n_shed']} shed) in {report.steps} steps / "
+          f"{report.now*1e3:.1f} ms simulated; TTFT p50 "
+          f"{s['ttft_p50_s']*1e3:.2f} ms p99 {s['ttft_p99_s']*1e3:.2f} ms; "
+          f"per-token p50 {s['tpot_p50_s']*1e3:.3f} ms; "
+          f"max concurrent {report.max_concurrent}")
     return {"generated": gen, "seconds": dt,
-            "tokens_per_s": n_requests * gen_len / dt}
+            "tokens_per_s": n_requests * gen_len / dt,
+            "report": s}
 
 
 def main() -> None:
@@ -109,9 +145,13 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--mesh", default="1x2x2")
+    ap.add_argument("--policy", default="priority",
+                    choices=("fifo", "priority", "slo"))
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop arrival rate (req/s); default: closed batch")
     args = ap.parse_args()
     out = serve(args.arch, args.requests, args.prompt_len, args.gen_len,
-                args.mesh)
+                args.mesh, policy=args.policy, rate=args.rate)
     print(f"[serve] generated {out['generated'].shape} tokens in "
           f"{out['seconds']:.2f}s ({out['tokens_per_s']:.1f} tok/s)")
     print("[serve] first request:", out["generated"][0][:16])

@@ -29,8 +29,9 @@ from repro.optim import adamw
 from repro.configs.shapes import ShapeSpec, AUDIO_SRC_FRACTION
 
 __all__ = ["model_dims_of", "make_train_step", "make_prefill_step",
-           "make_decode_step", "train_in_shardings", "cache_shardings",
-           "abstract_params", "layer_grad_bytes"]
+           "make_decode_step", "make_paged_decode_step", "train_in_shardings",
+           "cache_shardings", "paged_pool_shardings", "abstract_params",
+           "layer_grad_bytes"]
 
 
 def abstract_params(cfg: ModelConfig):
@@ -244,3 +245,29 @@ def make_decode_fn(cfg: ModelConfig, mesh):
 
 def make_decode_step(cfg: ModelConfig, mesh):
     return jax.jit(make_decode_fn(cfg, mesh), donate_argnums=(1,))
+
+
+def paged_pool_shardings(cfg: ModelConfig, mesh, pools_abstract) -> Any:
+    """Paged pools have no batch dim — any request's blocks live anywhere in
+    the shared pool — so the only safe static partition is over the KV-head
+    dim (model axis), mirroring tensor-parallel attention."""
+    msz = mesh.shape.get("model", 1)
+
+    def spec_for(leaf):
+        h_ax = _maybe("model", leaf.shape[3], msz)
+        return NamedSharding(mesh, P(None, None, None, h_ax, None))
+
+    return jax.tree.map(spec_for, pools_abstract)
+
+
+def make_paged_decode_fn(cfg: ModelConfig, mesh):
+    def run(params, pools, block_tables, tokens, pos):
+        return T.decode_step_paged(params, cfg, pools, block_tables,
+                                   tokens, pos)
+    return run
+
+
+def make_paged_decode_step(cfg: ModelConfig, mesh):
+    """Jitted paged decode step; the pool buffers are donated so the
+    fixed-size cache is updated in place across steps."""
+    return jax.jit(make_paged_decode_fn(cfg, mesh), donate_argnums=(1,))

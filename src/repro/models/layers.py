@@ -446,12 +446,71 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
     return o @ p["wo"], cache_k, cache_v
 
 
-def attention_prefill(p, cfg: ModelConfig, x, *, window=None):
+def paged_attention_decode(p, cfg: ModelConfig, x, pool_k, pool_v,
+                           block_tables, pos, *, window: int | None = None):
+    """One-token decode against a paged KV pool (vLLM-style block table).
+
+    x: (B,1,D); pool_k/v: (n_blocks, block_size, Hkv, hd) — one shared
+    physical pool per layer; block_tables: (B, max_blocks) int32 mapping each
+    slot's logical block i to a physical block (0 = the reserved null block,
+    never owned by a live request, so idle slots write there harmlessly);
+    pos: (B,) int32 per-slot token count — unlike the dense path the write
+    pointer is per request, which is what lets continuous batching mix
+    requests at different depths in one step.
+
+    The gather `pool[table]` reconstructs each slot's cache in logical token
+    order, so with max_blocks*block_size == s_max the score/softmax math is
+    term-for-term identical to :func:`attention_decode`'s dense full-
+    attention path — bit-identical logits (asserted in tests).  Windowed
+    layers store the full sequence and mask `pos - idx >= window` instead of
+    wrapping; numerics match the wrapped dense path exactly when no wrap has
+    occurred (window >= s_max) and to float tolerance otherwise (the softmax
+    sums the same terms in a different order).
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    BS = pool_k.shape[1]
+    bidx = block_tables[jnp.arange(B), pos // BS]       # (B,) physical block
+    off = pos % BS
+    pool_k = pool_k.at[bidx, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[bidx, off].set(v[:, 0].astype(pool_v.dtype))
+
+    MB = block_tables.shape[1]
+    S = MB * BS
+    gk = pool_k[block_tables].reshape(B, S, *pool_k.shape[2:])
+    gv = pool_v[block_tables].reshape(B, S, *pool_v.shape[2:])
+    idx = jnp.arange(S)
+    valid = idx[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= pos[:, None] - idx[None, :] < window
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, G, hd)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                    gk.astype(jnp.float32)) / math.sqrt(hd)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", pr, gv.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return o @ p["wo"], pool_k, pool_v
+
+
+def attention_prefill(p, cfg: ModelConfig, x, *, window=None,
+                      keep_full: bool = False):
     """Like attention_fwd (self, causal) but also returns the KV cache slice.
 
     For windowed layers the cache keeps the last ``window`` keys; prefill
     length must be a multiple of the window so modular slots line up with
-    ``attention_decode``'s write pointer.
+    ``attention_decode``'s write pointer.  ``keep_full`` returns the whole
+    sequence instead (the paged pool stores windowed layers unwrapped and
+    masks at read time), which also lifts the S %% window constraint.
     """
     B, S, D = x.shape
     hd = cfg.head_dim
@@ -465,7 +524,7 @@ def attention_prefill(p, cfg: ModelConfig, x, *, window=None):
     k = rope(k, pos, cfg.rope_theta)
     o = chunked_attention(q, k, v, causal=True, window=window)
     y = o.reshape(B, S, cfg.q_dim) @ p["wo"]
-    if window is not None and S >= window:
+    if window is not None and S >= window and not keep_full:
         if S % window != 0:
             raise ValueError(
                 f"windowed prefill needs S % window == 0, got "

@@ -224,12 +224,13 @@ def init_cache(cfg: ModelConfig, B: int, s_max: int, src_len: int = 0) -> list:
     return cache
 
 
-def _layer_prefill(p, cfg, kind, x, enc_out):
+def _layer_prefill(p, cfg, kind, x, enc_out, keep_full=False):
     """Returns (x_out, cache_entry) for one layer."""
     if kind in ("attn", "local"):
         window = cfg.window if kind == "local" else None
         y, ck, cv = L.attention_prefill(p["attn"], cfg,
-                                        L.rmsnorm(x, p["norm1"]), window=window)
+                                        L.rmsnorm(x, p["norm1"]), window=window,
+                                        keep_full=keep_full)
         x = x + y
         ent = {"k": ck, "v": cv}
         if enc_out is not None:
@@ -256,8 +257,16 @@ def _layer_prefill(p, cfg, kind, x, enc_out):
     raise ValueError(kind)
 
 
-def prefill(params, cfg: ModelConfig, inputs: dict, s_max: int):
-    """Process the prompt; return (last-token logits, cache, pos)."""
+def prefill(params, cfg: ModelConfig, inputs: dict, s_max: int, *,
+            last_pos=None, full_local_cache: bool = False):
+    """Process the prompt; return (last-token logits, cache, pos).
+
+    ``last_pos`` ((B,) int32) selects each row's last *real* token for the
+    logits instead of column -1 — right-padded variable-length prompts are
+    then safe: causality keeps pad tokens out of the real positions' scores,
+    and decode overwrites/masks the pad cache entries.  ``full_local_cache``
+    keeps windowed layers' caches unwrapped at full length (paged serving
+    stores them that way and masks at read time)."""
     enc_out = None
     src_len = 0
     if cfg.enc_dec:
@@ -268,7 +277,8 @@ def prefill(params, cfg: ModelConfig, inputs: dict, s_max: int):
     cache = []
     for stacked, (kind, n) in zip(params["runs"], cfg.runs()):
         body = jax.checkpoint(functools.partial(
-            _layer_prefill, cfg=cfg, kind=kind, enc_out=enc_out),
+            _layer_prefill, cfg=cfg, kind=kind, enc_out=enc_out,
+            keep_full=full_local_cache),
         prevent_cse=False)
 
         def step(x, p, body=body):
@@ -279,7 +289,8 @@ def prefill(params, cfg: ModelConfig, inputs: dict, s_max: int):
         # Pad attention caches out to s_max so decode can update in place.
         if kind in ("attn", "local"):
             s_c = ents["k"].shape[2]
-            tgt = min(cfg.window, s_max) if kind == "local" else s_max
+            tgt = s_max if full_local_cache or kind != "local" \
+                else min(cfg.window, s_max)
             if s_c < tgt:
                 pad = [(0, 0), (0, 0), (0, tgt - s_c), (0, 0), (0, 0)]
                 ents["k"] = jnp.pad(ents["k"], pad)
@@ -287,7 +298,11 @@ def prefill(params, cfg: ModelConfig, inputs: dict, s_max: int):
         cache.append(ents)
     x = L.rmsnorm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = (x[:, -1:] @ head.astype(x.dtype)).astype(jnp.float32)
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        xl = x[jnp.arange(x.shape[0]), last_pos][:, None]
+    logits = (xl @ head.astype(x.dtype)).astype(jnp.float32)
     return logits, cache, S
 
 
@@ -343,3 +358,93 @@ def decode_step(params, cfg: ModelConfig, cache: list, tokens, pos):
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------- #
+# Paged serving: block-pool cache / per-request-position decode
+# ---------------------------------------------------------------------- #
+
+def paged_arch_check(cfg: ModelConfig) -> None:
+    """Paged serving covers pure-attention stacks (attn/local, no enc-dec).
+
+    Recurrent kinds (rglru/rwkv6) carry positionless state that right-padded
+    variable-length prefill would corrupt, and enc-dec needs per-request
+    encoder outputs — neither fits the shared-pool layout."""
+    bad = [k for k, _ in cfg.runs() if k not in ("attn", "local")]
+    if bad or cfg.enc_dec:
+        raise ValueError(
+            f"paged serving supports attention-only decoder stacks; "
+            f"got kinds {bad or ['enc_dec']}")
+
+
+def init_paged_pools(cfg: ModelConfig, n_blocks: int, block_size: int) -> list:
+    """One k/v pool pair per run: (run, n_blocks, block_size, Hkv, hd).
+
+    Physical block 0 is reserved as the null block — allocators must never
+    hand it to a request, so inactive batch slots (block table all-zero) can
+    scatter into it without touching live data."""
+    paged_arch_check(cfg)
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    pools = []
+    for kind, n in cfg.runs():
+        shape = (n, n_blocks, block_size, Hkv, hd)
+        pools.append({"k": jnp.zeros(shape, jnp.bfloat16),
+                      "v": jnp.zeros(shape, jnp.bfloat16)})
+    return pools
+
+
+def scatter_prefill_cache(pools: list, cache: list, blocks, block_size: int,
+                          row: int = 0) -> list:
+    """Copy one request's dense prefill cache (from ``prefill`` with
+    ``full_local_cache=True``) into its allocated physical blocks.
+
+    cache entries: (run, B, S_p, Hkv, hd) with S_p % block_size == 0;
+    ``blocks``: the request's physical block ids, len == S_p // block_size.
+    Returns the updated pools list."""
+    blocks = jnp.asarray(blocks, jnp.int32)
+    out = []
+    for pool, ent in zip(pools, cache):
+        n, _, S_p, Hkv, hd = ent["k"].shape
+        if S_p % block_size:
+            raise ValueError(f"prefill length {S_p} not a multiple of "
+                             f"block_size {block_size}")
+        nb = S_p // block_size
+        if nb != len(blocks):
+            raise ValueError(f"need {nb} blocks, got {len(blocks)}")
+        kk = ent["k"][:, row].reshape(n, nb, block_size, Hkv, hd)
+        vv = ent["v"][:, row].reshape(n, nb, block_size, Hkv, hd)
+        out.append({"k": pool["k"].at[:, blocks].set(kk),
+                    "v": pool["v"].at[:, blocks].set(vv)})
+    return out
+
+
+def _layer_decode_paged(p, cfg, kind, x, ent, block_tables, pos):
+    window = cfg.window if kind == "local" else None
+    y, pk, pv = L.paged_attention_decode(
+        p["attn"], cfg, L.rmsnorm(x, p["norm1"]), ent["k"], ent["v"],
+        block_tables, pos, window=window)
+    x = x + y
+    sub = L.moe_fwd if cfg.moe else L.mlp_fwd
+    x = x + sub(p["mlp"], cfg, L.rmsnorm(x, p["norm2"]))
+    return x, {"k": pk, "v": pv}
+
+
+def decode_step_paged(params, cfg: ModelConfig, pools: list, block_tables,
+                      tokens, pos):
+    """One-token serve step over paged pools.  tokens: (B,1) int32;
+    block_tables: (B, max_blocks) int32; pos: (B,) int32 per-slot.
+    Returns (logits (B,1,V), new_pools)."""
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    new_pools = []
+    for stacked, ent, (kind, n) in zip(params["runs"], pools, cfg.runs()):
+        def step(x, p_ent, kind=kind):
+            p, e = p_ent
+            x, e2 = _layer_decode_paged(p, cfg, kind, x, e, block_tables, pos)
+            return x, e2
+
+        x, ent2 = lax.scan(step, x, (stacked, ent))
+        new_pools.append(ent2)
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_pools

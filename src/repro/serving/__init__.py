@@ -1,0 +1,20 @@
+"""Production-style serving subsystem: continuous batching over a paged KV
+cache with open-loop load and SLO-aware scheduling.
+
+Host-side pieces live here (request state machine, block allocator, traffic
+generation); the device-side paged attention path is in
+``repro.models.transformer`` / ``repro.models.layers``; the end-to-end driver
+is ``repro.launch.serve``."""
+from .kv_cache import BlockAllocator, OutOfBlocks, blocks_needed, \
+    build_block_tables
+from .loadgen import SLO, Request, ReqState, bursty_arrivals, make_requests, \
+    poisson_arrivals
+from .scheduler import Executor, JaxExecutor, Scheduler, ServeReport, \
+    SimExecutor, default_compute_model, summarize
+
+__all__ = [
+    "BlockAllocator", "OutOfBlocks", "blocks_needed", "build_block_tables",
+    "SLO", "Request", "ReqState", "poisson_arrivals", "bursty_arrivals",
+    "make_requests", "Executor", "SimExecutor", "JaxExecutor", "Scheduler",
+    "ServeReport", "summarize", "default_compute_model",
+]

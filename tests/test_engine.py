@@ -201,6 +201,49 @@ def test_priority_small_jumps_fat(fig8):
     assert lat["priority"][1] < lat["fifo"][1] * 1.5
 
 
+def test_priority_ageing_bounds_starvation(fig8):
+    """Satellite: under strict priority a sustained stream of small
+    high-priority ops on the fat broadcast's WAN edge starves it — its
+    finish grows with the stream length.  With priority-ageing the
+    preempted broadcast's effective priority rises while it waits, so
+    newly released stream ops eventually rank below it and the broadcast
+    completes in bounded time, independent of how long the stream runs."""
+    N = float(1 << 26)
+
+    def run(n_small, age_rate):
+        comm = Communicator(fig8, policy="paper", backend="sim")
+        eng = Engine(comm, policy="priority", age_rate=age_rate)
+        fat = eng.issue("bcast", N, root=0)
+        # same member set => FIFO chain: a back-to-back stream on (0, 16)
+        small = [eng.issue("bcast", 64e3, root=0, members=(0, 16),
+                           priority=1.0) for _ in range(n_small)]
+        eng.wait_all()
+        return fat.finished, small
+
+    starved_20, stream_20 = run(20, 0.0)
+    starved_60, stream_60 = run(60, 0.0)
+    # strict priority: every extra stream op stalls the broadcast for its
+    # whole transfer time — the delay grows linearly with the stream
+    extra = 40 * 64e3 / fig8.level_of_edge(0, 16).bandwidth
+    assert starved_60 - starved_20 >= 0.9 * extra
+
+    # ageing: ops released after ~(N+1)/rate seconds rank below the
+    # aged broadcast, so its finish no longer scales with the stream
+    rate = N  # the broadcast outranks fresh priority-1.0 ops after ~1 s
+    aged_20, _ = run(20, rate)
+    aged_60, aged_stream = run(60, rate)
+    assert aged_60 < starved_60
+    assert aged_60 == pytest.approx(aged_20, abs=1e-9)  # stream-length free
+    # the trade is explicit: ops released before the crossover still jump
+    # the broadcast, later ones queue behind its WAN transfer
+    assert aged_stream[0].finished == stream_60[0].finished
+    assert max(h.finished for h in aged_stream) \
+        > max(h.finished for h in stream_60)
+
+    with pytest.raises(ValueError, match="age_rate"):
+        Engine(Communicator(fig8, backend="sim"), age_rate=-1.0)
+
+
 def test_sim_policy_argmin_beats_or_matches_both(fig8):
     comm = Communicator(fig8, policy="paper", backend="sim")
     spans = {}
