@@ -1,0 +1,360 @@
+"""Kernel roofline benchmark: the Pallas kernels (flash fwd/bwd, int8
+quantiser, fused quantise+EF, wkv scan) against analytic FLOP/byte models
+and the chip roofline, persisted to ``BENCH_kernels.json`` at the repo root.
+
+Four sections:
+
+``kernels``
+    One row per kernel x shape: analytic FLOPs + HBM bytes (models below),
+    measured wall, and :func:`repro.core.costmodel.kernel_roofline` output —
+    which ceiling binds, model wall, achieved-vs-peak fractions.  Off-TPU
+    the kernels run in interpret mode, so the achieved fractions are
+    structural (the ``backend`` field says what was measured); on TPU the
+    same rows are the real roofline numbers.
+``compression_path``
+    The tentpole traffic claim: modeled HBM bytes/element of the two-pass
+    EF update (add, quantise, dequantise, subtract — each an HBM round
+    trip) vs the FUSED ``quantize_ef_int8`` kernel (one pass), plus the
+    measured walls of both paths.  Acceptance: modeled ratio >= 2x.
+``acceptance``
+    Pallas flash backward grads vs the jnp custom-VJP oracle
+    (``models.layers._flash``) and bit-identity of the fused EF kernel vs
+    the two-pass kernel path.
+``refit``
+    :func:`repro.core.costmodel.refit_hw` applied to the best achieved
+    fractions — the derated HW constants downstream rooflines would use on
+    this machine (meaningful on TPU; recorded for structure elsewhere).
+
+Byte models count HBM traffic at the BlockSpec level: every staged block is
+a fetch (``pl.when`` skips compute, not the copy), blocks whose index map
+is constant across the innermost grid dim are fetched once.  FLOP models
+count only on-band blocks (``roofline.attn_kv_eff`` — the same blocking the
+kernels skip with ``pl.when``).
+
+``--smoke`` runs reduced shapes and checks the committed artifact's schema
+instead of overwriting it (see ``bench_schema.py``); CI runs this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.core.costmodel import TPU_V5E, kernel_roofline, refit_hw
+from repro.kernels import ops
+from repro.kernels import flash_attention as fa
+from repro.kernels import wkv as wkv_mod
+from repro.models import layers
+
+F32 = 4  # bytes
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)          # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------- #
+# Analytic FLOP / HBM-byte models
+# ---------------------------------------------------------------------- #
+
+def flash_flops(B, H, Sq, kv_eff, hd, *, bwd: bool) -> float:
+    """fwd: qk^T + pv = 4 FLOPs per (q, kv, d) triple over on-band kv.
+    bwd: both kernels recompute s (2x2), dq adds dp + ds@k (2x2), dkv adds
+    p^T@do + ds^T@q (2x2) -> 14x."""
+    per = 14.0 if bwd else 4.0
+    return per * B * H * Sq * kv_eff * hd
+
+
+def flash_fwd_bytes(B, Hkv, G, Sq, Sk, hd, block_q, in_bytes=F32) -> float:
+    """Per fold (B*Hkv): q read once (index map constant over j), k/v
+    re-staged per q block row, o write, lse write (f32)."""
+    n_q = Sq // block_q
+    per_fold = (G * Sq * hd * in_bytes          # q
+                + n_q * Sk * hd * 2 * in_bytes  # k, v per q row
+                + G * Sq * hd * in_bytes        # o
+                + G * Sq * F32)                 # lse
+    return B * Hkv * per_fold
+
+
+def flash_bwd_bytes(B, Hkv, G, Sq, Sk, hd, block_q, block_k,
+                    in_bytes=F32) -> float:
+    """dq kernel (kv innermost: q/do/lse/delta staged once per row, k/v per
+    (i,j)) + dkv kernel (q innermost: k/v once per column, q-side per
+    (j,i)) + the delta precompute (read do+o, write delta)."""
+    n_q, n_k = Sq // block_q, Sk // block_k
+    dq = (G * Sq * (2 * hd * in_bytes + 2 * F32)   # q, do, lse, delta
+          + n_q * Sk * hd * 2 * in_bytes           # k, v
+          + G * Sq * hd * F32)                     # dq write (f32)
+    dkv = (Sk * hd * 2 * in_bytes                  # k, v
+           + n_k * G * Sq * (2 * hd * in_bytes + 2 * F32)
+           + Sk * hd * 2 * F32)                    # dk, dv writes
+    delta = B * Hkv * G * Sq * (2 * hd * in_bytes + F32)
+    return B * Hkv * (dq + dkv) + delta
+
+
+def quant_bytes(n: int, *, fused_ef: bool | None) -> float:
+    """HBM bytes of the quantiser kernels on an n-element f32 buffer.
+    fused_ef=None: plain quantise.  True: the fused x+ef+residual pass.
+    False: the TWO-PASS EF update (add, quantise, dequantise, subtract),
+    each stage an HBM round trip — the fused kernel's baseline."""
+    scales = F32 * n / compression.BLOCK
+    if fused_ef is None:
+        return n * F32 + n + scales                      # read x; write q, s
+    if fused_ef:
+        return 2 * n * F32 + n + scales + n * F32        # x, ef; q, s, r
+    add = 3 * n * F32                                    # g + ef -> x
+    quant = n * F32 + n + scales
+    deq = n + scales + n * F32
+    sub = 3 * n * F32                                    # x - deq -> r
+    return add + quant + deq + sub
+
+
+def wkv_flops(B, H, S, hd, chunk) -> float:
+    """Per chunk: two (C,hd)@(hd,hd)-class dots (inter-chunk out + state
+    update) and two (C,C,hd) dots (intra-chunk scores + scores@v)."""
+    return B * H * (4.0 * S * hd * hd + 4.0 * S * chunk * hd)
+
+
+def wkv_bytes(B, H, S, hd) -> float:
+    return B * H * (4 * S * hd + S * hd + hd) * F32      # r,k,v,w; o; u
+
+
+# ---------------------------------------------------------------------- #
+# Measured rows
+# ---------------------------------------------------------------------- #
+
+def _row(name, shape_desc, flops, hbm_bytes, wall_s, backend) -> dict:
+    rl = kernel_roofline(flops, hbm_bytes, TPU_V5E, wall_s=wall_s)
+    return {"kernel": name, "shape": shape_desc, "backend": backend,
+            "flops": flops, "hbm_bytes": hbm_bytes, **rl}
+
+
+def kernel_rows(smoke: bool) -> list[dict]:
+    backend = jax.default_backend()
+    rows = []
+    S = 256 if smoke else 512
+    B, Hkv, G, hd, blk = 1, 2, 2, 64, 128
+    H = Hkv * G
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hkv, hd), jnp.float32)
+    kv_eff = _kv_eff(S, blk)
+    desc = f"B{B} H{H} Hkv{Hkv} S{S} hd{hd} blk{blk} causal"
+
+    def fwd(q, k, v):
+        return ops.flash_attention(q, k, v, block_q=blk, block_k=blk)
+
+    rows.append(_row(
+        "flash_fwd", desc,
+        flash_flops(B, H, S, kv_eff, hd, bwd=False),
+        flash_fwd_bytes(B, Hkv, G, S, S, hd, blk),
+        _time(fwd, q, k, v), backend))
+
+    grad = jax.jit(jax.grad(lambda q, k, v: jnp.sum(fwd(q, k, v))))
+    rows.append(_row(
+        "flash_bwd", desc,
+        flash_flops(B, H, S, kv_eff, hd, bwd=True),
+        flash_bwd_bytes(B, Hkv, G, S, S, hd, blk, blk),
+        _time(grad, q, k, v), backend))
+
+    n = compression.QTILE * (1 if smoke else 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    ef = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32) * 1e-3
+    rows.append(_row(
+        "quantize_int8", f"n={n}",
+        0.0 + 3 * n,                   # amax, scale, round ~ O(n) VPU work
+        quant_bytes(n, fused_ef=None),
+        _time(lambda a: ops.quantize_int8(a)[0], x), backend))
+    rows.append(_row(
+        "quantize_ef_int8", f"n={n}",
+        0.0 + 6 * n,
+        quant_bytes(n, fused_ef=True),
+        _time(lambda a, e: ops.quantize_ef_int8(a, e)[2], x, ef), backend))
+
+    Sw, hdw, Hw = (64, 32, 2) if smoke else (256, 32, 2)
+    r = jax.random.normal(jax.random.PRNGKey(3), (B, Sw, Hw, hdw))
+    kw = jax.random.normal(jax.random.PRNGKey(4), (B, Sw, Hw, hdw))
+    vw = jax.random.normal(jax.random.PRNGKey(5), (B, Sw, Hw, hdw))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(6),
+                                         (B, Sw, Hw, hdw)))
+    u = jax.random.normal(jax.random.PRNGKey(7), (Hw, hdw))
+    rows.append(_row(
+        "wkv_scan", f"B{B} H{Hw} S{Sw} hd{hdw} chunk{wkv_mod.CHUNK}",
+        wkv_flops(B, Hw, Sw, hdw, wkv_mod.CHUNK),
+        wkv_bytes(B, Hw, Sw, hdw),
+        _time(jax.jit(wkv_mod.wkv_chunked), r, kw, vw, w, u), backend))
+    return rows
+
+
+def _kv_eff(S: int, blk: int) -> float:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from roofline import attn_kv_eff
+
+    return attn_kv_eff(S, True, None, block_skip=True, chunk=blk)
+
+
+# ---------------------------------------------------------------------- #
+# Compression-path traffic + acceptance checks
+# ---------------------------------------------------------------------- #
+
+def compression_path(smoke: bool) -> dict:
+    n = compression.QTILE * (1 if smoke else 8)
+    fused_b = quant_bytes(n, fused_ef=True)
+    twopass_b = quant_bytes(n, fused_ef=False)
+    x = jax.random.normal(jax.random.PRNGKey(8), (n,), jnp.float32)
+    ef = jax.random.normal(jax.random.PRNGKey(9), (n,), jnp.float32) * 1e-3
+
+    def two_pass(x, ef):
+        g = x + ef
+        q, s, pad = ops.quantize_int8(g)
+        return g - ops.dequantize_int8(q, s, pad)
+
+    ratio = twopass_b / fused_b
+    return {
+        "n": n,
+        "fused_bytes_per_elem": fused_b / n,
+        "twopass_bytes_per_elem": twopass_b / n,
+        "modeled_traffic_ratio": ratio,
+        "fused_wall_s": _time(lambda a, e: ops.quantize_ef_int8(a, e)[2],
+                              x, ef),
+        "twopass_wall_s": _time(two_pass, x, ef),
+        "acceptance_min_ratio": 2.0,
+        "passed": ratio >= 2.0,
+    }
+
+
+def acceptance(smoke: bool) -> dict:
+    S = 256
+    B, Hkv, G, hd, blk = 1, 2, 2, 32, 64
+    H = Hkv * G
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hkv, hd), jnp.float32)
+
+    def loss_pallas(q, k, v):
+        o = fa.flash_attention(q, k, v, True, None, blk, blk, 0, None)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_jnp(q, k, v):
+        o = layers._flash(q, k, v, True, None, blk, blk, 0)
+        return jnp.sum(jnp.sin(o))
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gj = jax.grad(loss_jnp, argnums=(0, 1, 2))(q, k, v)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(gp, gj))
+
+    n = compression.QTILE
+    x = jax.random.normal(jax.random.PRNGKey(11), (n,), jnp.float32) * 10
+    ef = jax.random.normal(jax.random.PRNGKey(12), (n,), jnp.float32) * 1e-3
+    qf, sf, rf, _ = ops.quantize_ef_int8(x, ef)
+    q2, s2, pad = ops.quantize_int8(x + ef)
+    r2 = (x + ef) - ops.dequantize_int8(q2, s2, pad)
+    bitident = (bool(jnp.all(qf == q2)) and bool(jnp.all(sf == s2))
+                and bool(jnp.all(rf == r2)))
+    tol = 1e-4
+    return {
+        "flash_bwd_max_err": err,
+        "flash_bwd_tol": tol,
+        "flash_bwd_allclose": err <= tol,
+        "fused_ef_bitidentical": bitident,
+        "passed": err <= tol and bitident,
+    }
+
+
+def build_doc(smoke: bool = False) -> dict:
+    rows = kernel_rows(smoke)
+    comp = compression_path(smoke)
+    acc = acceptance(smoke)
+    best_f = max(r["achieved_flops_frac"] for r in rows)
+    best_b = max(r["achieved_bw_frac"] for r in rows)
+    fitted = refit_hw(TPU_V5E, flops_frac=best_f, bw_frac=best_b,
+                      name=f"{TPU_V5E.name}_fit_{jax.default_backend()}")
+    summary = []
+    for r in rows:
+        summary.append(
+            f"{r['kernel']}: {r['bound']}-bound (intensity "
+            f"{r['intensity']:.1f} vs ridge {r['ridge']:.0f} FLOP/B), "
+            f"model {r['model_s'] * 1e6:.0f} us, wall "
+            f"{r['wall_s'] * 1e3:.2f} ms on {r['backend']}")
+    summary.append(
+        f"fused EF: {comp['fused_bytes_per_elem']:.2f} B/elem vs two-pass "
+        f"{comp['twopass_bytes_per_elem']:.2f} — modeled HBM traffic "
+        f"{comp['modeled_traffic_ratio']:.2f}x (acceptance >= 2x: "
+        f"{'PASS' if comp['passed'] else 'FAIL'}); measured "
+        f"{comp['twopass_wall_s'] / comp['fused_wall_s']:.2f}x wall")
+    summary.append(
+        f"flash bwd vs jnp VJP: max grad err {acc['flash_bwd_max_err']:.2e} "
+        f"(tol {acc['flash_bwd_tol']:g}: "
+        f"{'PASS' if acc['flash_bwd_allclose'] else 'FAIL'}); fused EF "
+        f"bit-identical to two-pass: "
+        f"{'PASS' if acc['fused_ef_bitidentical'] else 'FAIL'}")
+    return {
+        "generated_by": "benchmarks/bench_kernels.py",
+        "backend": jax.default_backend(),
+        "hw": TPU_V5E.name,
+        "kernels": rows,
+        "compression_path": comp,
+        "acceptance": acc,
+        "refit": {
+            "best_achieved_flops_frac": best_f,
+            "best_achieved_bw_frac": best_b,
+            "fitted_name": fitted.name,
+            "fitted_peak_flops": fitted.peak_flops,
+            "fitted_hbm_bw": fitted.hbm_bw,
+        },
+        "summary": summary,
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_kernels.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        if not doc["acceptance"]["passed"]:
+            print("kernel acceptance failed (flash bwd grads or fused EF "
+                  "bit-identity)", file=sys.stderr)
+            return 1
+        if not doc["compression_path"]["passed"]:
+            print("fused EF modeled traffic ratio below the 2x acceptance "
+                  "bar", file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_kernels.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_kernels.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

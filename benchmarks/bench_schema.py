@@ -19,6 +19,7 @@ ARTIFACTS = {
     "BENCH_discovery.json": "benchmarks/bench_discovery.py",
     "BENCH_elastic.json": "benchmarks/bench_elastic.py",
     "BENCH_engine.json": "benchmarks/bench_engine.py",
+    "BENCH_kernels.json": "benchmarks/bench_kernels.py",
     "BENCH_serve.json": "benchmarks/bench_serve.py",
 }
 

@@ -47,12 +47,16 @@ def _mlp_flops_per_tok(cfg):
     return 2 * mult * cfg.d_model * cfg.d_ff
 
 
-def _attn_kv_eff(S, causal, window, block_skip, chunk=512):
+def attn_kv_eff(S, causal, window, block_skip, chunk=512):
     """Average kv positions COMPUTED per query under the flash blocking.
 
     block_skip=False: the pre-skip implementation computes every (i,j) block
     (full S).  block_skip=True: exact count of on-band blocks (lax.cond skip
-    in models.layers), averaged over q blocks."""
+    in models.layers), averaged over q blocks.
+
+    Public: benchmarks/bench_kernels.py uses this for the Pallas flash
+    kernels' analytic FLOPs (the kernels skip off-band blocks with pl.when,
+    the same blocking this function counts)."""
     if not block_skip:
         return min(S, window + chunk) if (window and not causal) else S
     cq = ck = min(chunk, S)
@@ -76,7 +80,7 @@ def _layer_flops_per_tok(cfg, kind, kv_len, block_skip=False, decode=False):
         if decode:  # one query against the whole (windowed) cache
             eff = min(kv_len, window) if window else kv_len
         else:
-            eff = _attn_kv_eff(kv_len, True, window, block_skip)
+            eff = attn_kv_eff(kv_len, True, window, block_skip)
         proj = 2 * (D * cfg.q_dim + 2 * D * cfg.kv_dim + cfg.q_dim * D)
         attn = 4 * cfg.n_heads * cfg.head_dim * eff
         return proj + attn + _mlp_flops_per_tok(cfg)

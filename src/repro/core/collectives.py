@@ -86,17 +86,24 @@ def multilevel_psum(
     return x if ef is None else (x, new_ef)
 
 
-def compress_ef_zeros(grads: Any, fast_degree: int) -> jax.Array:
+def compress_ef_zeros(grads: Any, fast_degree: int,
+                      tile: int = 1) -> jax.Array:
     """Zero-initialised error-feedback residual for
     ``multilevel_psum_tree(..., mode="multilevel_compress", ef=...)``:
     shaped like the post-reduce-scatter shard of the fused flat buffer
     (total padded leaf count divided by the fast-axis degree).  This is
     the PER-RANK shard; residuals diverge across dp ranks, so when
     entering ``shard_map`` from the outside, tile it by the dp degree and
-    shard it over ``(slow, *fast)``."""
+    shard it over ``(slow, *fast)``.
+
+    ``tile``: additionally round the PER-RANK shard up to a multiple —
+    pass ``compression.QTILE`` so the fused Pallas quantiser sees a
+    pad-free shard (``multilevel_psum_tree`` pads the flat buffer to
+    ``ef.size * fast_degree`` to match)."""
     total = sum(int(l.size) for l in jax.tree.leaves(grads))
-    padded = total + (-total) % max(fast_degree, 1)
-    return jnp.zeros((padded // max(fast_degree, 1),), jnp.float32)
+    fd = max(fast_degree, 1)
+    padded = total + (-total) % (fd * max(tile, 1))
+    return jnp.zeros((padded // fd,), jnp.float32)
 
 
 # ---------------------------------------------------------------------- #
@@ -155,6 +162,22 @@ def multilevel_psum_tree(
         for ax in fast_axes:
             pad_mult *= int(lax.psum(1, ax))
         flat, spec = flatten_tree(grads, pad_mult)
+        if ef is not None:
+            # The residual's size defines the shard: compress_ef_zeros may
+            # round it up (tile=QTILE keeps the fused quantiser pad-free),
+            # so grow the flat buffer to match and fold the extra zeros
+            # into the spec's pad for unflatten.
+            want = int(ef.size) * pad_mult
+            if flat.size > want:
+                raise ValueError(
+                    f"ef residual too small for this pytree: shard is "
+                    f"{ef.size} elements but the padded flat buffer needs "
+                    f"{flat.size // pad_mult} (see compress_ef_zeros)")
+            if flat.size < want:
+                extra = want - flat.size
+                flat = jnp.pad(flat, (0, extra))
+                treedef, shapes, dtypes, sizes, pad = spec
+                spec = (treedef, shapes, dtypes, sizes, pad + extra)
         flat = multilevel_psum(
             flat, slow_axis, fast_axes,
             compress_slow=(mode == "multilevel_compress"), ef=ef,

@@ -6,9 +6,18 @@ hop of the multilevel all-reduce — the paper's principle of spending effort
 on the slowest level.  int8 halves/quarters the bytes crossing the DCN while
 the fast intra-pod stages stay full precision.
 
-The quantiser has a Pallas kernel (`repro.kernels.quant`) for the TPU target;
-this module falls back to the pure-jnp reference implementation when the
-kernel is disabled (e.g. under vmap tracing on CPU tests).
+The quantiser has Pallas kernels (`repro.kernels.quant`); on TPU the
+EF-corrected path uses the FUSED ``quantize_ef_int8`` kernel (x+ef, quantise,
+and the residual update in one VMEM pass — ~2.6x less HBM traffic than the
+two-pass quantise/dequantise/subtract below, see ``BENCH_kernels.json``).
+Off-TPU this module defaults to the pure-jnp reference implementation (the
+interpreter would only slow CPU tests down); pass ``use_kernel=True`` to
+force the kernel (interpret mode resolves per backend).
+
+This module is also the single source of truth for the quantiser's tiling
+constants: ``BLOCK`` (elements per scale), ``TILE`` (blocks per kernel VMEM
+stage) and ``QTILE = BLOCK * TILE`` (elements per stage — the kernel's
+divisibility requirement).  ``repro.kernels.quant`` imports them from here.
 """
 from __future__ import annotations
 
@@ -16,10 +25,33 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+__all__ = ["BLOCK", "TILE", "QTILE", "WIRE_BYTES_PER_ELEM", "pad_to_block",
+           "quantize_int8", "dequantize_int8", "compressed_psum",
            "apply_error_feedback"]
 
-BLOCK = 256  # elements per scale block
+BLOCK = 256        # elements per scale block
+TILE = 32          # quant blocks per kernel grid step
+QTILE = BLOCK * TILE   # elements per kernel VMEM stage (kernel granularity)
+
+# int8 payload + one f32 scale per BLOCK: the compressed slow-hop wire cost
+# per f32 element (vs 4.0 uncompressed) — used by the engine/benchmarks to
+# price the DCN exchange.
+WIRE_BYTES_PER_ELEM = 1.0 + 4.0 / BLOCK
+
+
+def pad_to_block(x: jax.Array, multiple: int = BLOCK):
+    """Zero-pad a 1-D buffer to a multiple.  Returns ``(padded, pad)`` with
+    ``pad`` a python int, so callers can slice results back without
+    re-deriving the quantiser's granularity."""
+    if x.ndim != 1:
+        raise ValueError(f"pad_to_block needs a 1-D buffer, got {x.shape}")
+    pad = (-x.size) % multiple
+    return (jnp.pad(x, (0, pad)) if pad else x), pad
+
+
+def _kernel_default() -> bool:
+    # compiled Pallas only pays off on real TPU; CPU tests keep the jnp path
+    return jax.default_backend() == "tpu"
 
 
 def quantize_int8(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, jax.Array]:
@@ -27,7 +59,7 @@ def quantize_int8(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, jax.Arra
 
     Returns (q:int8 [N], scales:f32 [N/block]).  N must divide by block —
     callers pad (the multilevel allreduce already pads to the dp degree; we
-    additionally pad to BLOCK).
+    additionally pad to BLOCK, see :func:`pad_to_block`).
     """
     # real exceptions, not `assert`: a shape error here must not turn into
     # silently garbled gradients under `python -O`
@@ -47,8 +79,18 @@ def dequantize_int8(q: jax.Array, scales: jax.Array, block: int = BLOCK) -> jax.
             * scales[:, None]).reshape(-1)
 
 
+def _resolve_use_kernel(use_kernel: bool | None, block: int) -> bool:
+    if use_kernel is None:
+        return block == BLOCK and _kernel_default()
+    if use_kernel and block != BLOCK:
+        raise ValueError(f"the Pallas quantiser is tiled for block={BLOCK}; "
+                         f"pass use_kernel=False for block={block}")
+    return bool(use_kernel)
+
+
 def compressed_psum(x: jax.Array, axis: str, block: int = BLOCK,
-                    ef: jax.Array | None = None):
+                    ef: jax.Array | None = None,
+                    use_kernel: bool | None = None):
     """All-reduce over ``axis`` sending int8 on the wire.
 
     int8 cannot be accumulated in-network; we all-gather the quantised shards
@@ -57,18 +99,35 @@ def compressed_psum(x: jax.Array, axis: str, block: int = BLOCK,
     gather across a handful of pods is small; wire bytes = N(int8) + N/block
     scales ≈ 0.26x of f32.
 
-    ``ef`` is the error-feedback residual (same shape as ``x``): when
+    ``ef`` is the error-feedback residual (same size as ``x``): when
     given, it is added to ``x`` before quantisation and the call returns
     ``(out, new_ef)`` where ``new_ef`` is the local quantisation error of
     the corrected buffer.  Carrying that residual across steps is what
     stops the int8 rounding bias from accumulating in the optimiser —
     without it, a multi-step compressed all-reduce drifts from the exact
     path (classic EF-SGD; see ``apply_error_feedback``).
+
+    ``use_kernel``: None -> auto (Pallas kernel on TPU, jnp elsewhere).
+    The kernel path pads to :data:`QTILE` instead of ``block`` (slightly
+    more wire bytes on unaligned buffers; size residuals with
+    ``collectives.compress_ef_zeros(..., tile=QTILE)`` to make the shard
+    pad-free) and, with ``ef``, runs the FUSED quantise+EF kernel: one
+    VMEM pass instead of quantise/dequantise/subtract round-trips.
     """
-    xin = x if ef is None else x + ef.reshape(x.shape)
-    pad = (-xin.size) % block
-    xp = jnp.pad(xin, (0, pad)) if pad else xin
-    q, s = quantize_int8(xp, block)
+    use_kernel = _resolve_use_kernel(use_kernel, block)
+    new_ef = None
+    if use_kernel:
+        from repro.kernels import quant as kq  # lazy: keep core import-light
+        xp, pad = pad_to_block(x, QTILE)
+        if ef is not None:
+            efp, _ = pad_to_block(ef.reshape(-1), QTILE)
+            q, s, new_ef = kq.quantize_ef_int8(xp, efp)
+        else:
+            q, s = kq.quantize_int8(xp)
+    else:
+        xin = x if ef is None else x + ef.reshape(x.shape)
+        xp, pad = pad_to_block(xin, block)
+        q, s = quantize_int8(xp, block)
     qs = lax.all_gather(q, axis)          # [npods, N] int8 on the wire
     ss = lax.all_gather(s, axis)          # [npods, N/block] f32 (tiny)
     full = jax.vmap(lambda qq, sc: dequantize_int8(qq, sc, block))(qs, ss)
@@ -77,20 +136,31 @@ def compressed_psum(x: jax.Array, axis: str, block: int = BLOCK,
         out = out[: out.size - pad]
     if ef is None:
         return out
+    if use_kernel:
+        return out, new_ef[: x.size]
     deq = dequantize_int8(q, s, block)[: xin.size]  # own shard, local
     return out, xin - deq
 
 
 def apply_error_feedback(
-    grad_flat: jax.Array, ef: jax.Array, block: int = BLOCK
+    grad_flat: jax.Array, ef: jax.Array, block: int = BLOCK,
+    use_kernel: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Classic EF: add residual, quantise-dequantise locally to compute the
     new residual.  Returns (corrected_grad, new_ef).  This is the local
     (no-collective) form of the correction :func:`compressed_psum` applies
-    when handed an ``ef`` buffer."""
+    when handed an ``ef`` buffer.  ``use_kernel`` as in
+    :func:`compressed_psum`: the fused kernel produces the residual in the
+    same VMEM pass as the quantisation."""
+    use_kernel = _resolve_use_kernel(use_kernel, block)
     g = grad_flat + ef
-    pad = (-g.size) % block
-    gp = jnp.pad(g, (0, pad)) if pad else g
+    if use_kernel:
+        from repro.kernels import quant as kq
+        gp, _ = pad_to_block(grad_flat, QTILE)
+        efp, _ = pad_to_block(ef, QTILE)
+        _, _, new_ef = kq.quantize_ef_int8(gp, efp)
+        return g, new_ef[: g.size]
+    gp, _ = pad_to_block(g, block)
     q, s = quantize_int8(gp, block)
     deq = dequantize_int8(q, s, block)
     deq = deq[: g.size]

@@ -23,6 +23,8 @@ __all__ = [
     "MAX_SEGMENTS",
     "MIN_CHUNK_BYTES",
     "roofline_terms",
+    "kernel_roofline",
+    "refit_hw",
 ]
 
 
@@ -152,3 +154,57 @@ def roofline_terms(
     terms["bound"] = max(terms, key=terms.get).replace("_s", "")
     terms["step_s"] = max(compute, memory, collective)
     return terms
+
+
+def kernel_roofline(
+    flops: float,
+    hbm_bytes: float,
+    hw: HW = TPU_V5E,
+    wall_s: float | None = None,
+) -> dict[str, float]:
+    """Single-chip roofline for ONE kernel: analytic FLOPs + HBM bytes
+    against the chip's two ceilings (no collective term — kernels are local).
+
+    Returns compute_s / memory_s, the kernel's arithmetic intensity vs the
+    chip's ridge point (FLOP/byte where the two ceilings meet), which
+    ceiling binds, and the model wall ``model_s = max(...)``.  With a
+    measured ``wall_s``, adds the achieved-vs-peak fractions
+    (``achieved_flops_frac`` / ``achieved_bw_frac``) and the model/measured
+    ratio — the numbers ``benchmarks/bench_kernels.py`` persists and
+    :func:`refit_hw` consumes to derate the HW constants to a machine.
+    """
+    if flops < 0 or hbm_bytes <= 0:
+        raise ValueError(f"kernel_roofline needs flops >= 0 and "
+                         f"hbm_bytes > 0, got {flops=} {hbm_bytes=}")
+    compute = flops / hw.peak_flops
+    memory = hbm_bytes / hw.hbm_bw
+    out = {
+        "compute_s": compute,
+        "memory_s": memory,
+        "intensity": flops / hbm_bytes,
+        "ridge": hw.peak_flops / hw.hbm_bw,
+        "bound": "compute" if compute >= memory else "memory",
+        "model_s": max(compute, memory),
+    }
+    if wall_s is not None:
+        if wall_s <= 0:
+            raise ValueError(f"wall_s must be positive, got {wall_s}")
+        out["wall_s"] = wall_s
+        out["achieved_flops_frac"] = (flops / wall_s) / hw.peak_flops
+        out["achieved_bw_frac"] = (hbm_bytes / wall_s) / hw.hbm_bw
+        out["model_over_wall"] = out["model_s"] / wall_s
+    return out
+
+
+def refit_hw(hw: HW, *, flops_frac: float, bw_frac: float, name: str) -> HW:
+    """Derate a spec-sheet :class:`HW` to MEASURED ceilings: scale
+    ``peak_flops`` / ``hbm_bw`` by the best achieved fractions observed by
+    the kernel benchmark, so subsequent :func:`roofline_terms` /
+    :func:`kernel_roofline` calls model this machine instead of the
+    datasheet.  Fractions are clamped to (0, 1] — a kernel cannot beat the
+    roof; measuring above it means the byte/FLOP model is wrong, not the
+    silicon generous."""
+    f = min(max(flops_frac, 1e-6), 1.0)
+    b = min(max(bw_frac, 1e-6), 1.0)
+    return dataclasses.replace(
+        hw, name=name, peak_flops=hw.peak_flops * f, hbm_bw=hw.hbm_bw * b)

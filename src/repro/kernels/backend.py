@@ -1,0 +1,22 @@
+"""Backend detection shared by every Pallas kernel entry point.
+
+All kernels in this package take ``interpret: bool | None = None``:
+``None`` resolves at call time to "interpret off-TPU" — CPU/GPU (this
+container, CI) execute the kernels through the Pallas interpreter, a real
+TPU compiles them — while an explicit bool always wins, so tests can force
+either path and a TPU run can still drop to interpret mode for debugging.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "resolve_interpret"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> auto (interpret unless running on TPU); bools pass through."""
+    return (not on_tpu()) if interpret is None else bool(interpret)

@@ -1,8 +1,9 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and should be False
-on real TPU; the flag is threaded, never hard-coded, so the same call sites
-run in both environments.
+``interpret=None`` auto-detects the backend (interpret off-TPU, compiled on
+TPU — see ``repro.kernels.backend``); an explicit bool always wins.  The
+flag is threaded, never hard-coded, so the same call sites run in both
+environments.
 """
 from __future__ import annotations
 
@@ -11,20 +12,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import QTILE
 from . import flash_attention as _fa
 from . import quant as _q
-
-_ON_TPU = jax.default_backend() == "tpu"
+from .backend import on_tpu, resolve_interpret  # noqa: F401  (re-exported)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "q_offset",
+                                             "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None,
                     block_q=_fa.DEFAULT_BLOCK_Q, block_k=_fa.DEFAULT_BLOCK_K,
-                    interpret=not _ON_TPU):
-    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                   block_q=block_q, block_k=block_k,
-                                   interpret=interpret)
+                    q_offset=0, interpret=None):
+    """Differentiable flash attention: forward AND backward are Pallas
+    kernels (``jax.custom_vjp`` wired in ``repro.kernels.flash_attention``)."""
+    return _fa.flash_attention(q, k, v, causal, window, block_q, block_k,
+                               q_offset, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("pad", "interpret"))
@@ -33,14 +36,36 @@ def _quantize_padded(x, pad, interpret):
     return _q.quantize_int8(xp, interpret=interpret)
 
 
-def quantize_int8(x, *, interpret=not _ON_TPU):
+def quantize_int8(x, *, interpret=None):
     """Returns (q, scales, pad) — pad is a python int for the dequant call."""
-    pad = int((-x.size) % (_q.QBLOCK * _q.TILE))
+    pad = int((-x.size) % QTILE)
     q, s = _quantize_padded(x, pad, interpret)
     return q, s, pad
 
 
 @functools.partial(jax.jit, static_argnames=("pad", "interpret"))
-def dequantize_int8(q, scales, pad=0, *, interpret=not _ON_TPU):
+def dequantize_int8(q, scales, pad=0, *, interpret=None):
     x = _q.dequantize_int8(q, scales, interpret=interpret)
     return x[: x.size - pad] if pad else x
+
+
+@functools.partial(jax.jit, static_argnames=("pad", "interpret"))
+def _quantize_ef_padded(x, ef, pad, interpret):
+    if pad:
+        x, ef = jnp.pad(x, (0, pad)), jnp.pad(ef, (0, pad))
+    q, s, r = _q.quantize_ef_int8(x, ef, interpret=interpret)
+    return q, s, r[: r.size - pad] if pad else r
+
+
+def quantize_ef_int8(x, ef, *, interpret=None):
+    """Fused quantise + error-feedback update (one VMEM pass).
+
+    Returns (q, scales, new_ef, pad): ``q``/``scales`` cover the padded
+    buffer (pad is a python int for the dequant call); ``new_ef`` is sliced
+    back to ``x.size`` and carries ``(x+ef) - dequant(q)``."""
+    if x.shape != ef.shape:
+        raise ValueError(f"quantize_ef_int8 needs matching shapes, got "
+                         f"x={x.shape} ef={ef.shape}")
+    pad = int((-x.size) % QTILE)
+    q, s, r = _quantize_ef_padded(x, ef, pad, interpret)
+    return q, s, r, pad

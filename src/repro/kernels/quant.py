@@ -1,11 +1,19 @@
-"""Pallas TPU kernel: blockwise symmetric int8 quantise / dequantise.
+"""Pallas TPU kernels: blockwise symmetric int8 quantise / dequantise, and
+the FUSED quantise + error-feedback residual update.
 
 Used by the slow-link (DCN) gradient compressor — the perf-critical inner
 loop of the paper-inspired topology-aware compression: gradients cross the
 pod boundary as int8 + per-block f32 scales (~0.26x of f32 wire bytes).
 
+``quantize_ef_int8`` computes ``q``, ``scales`` AND the new EF residual
+``(x+ef) - dequant(q)`` in one VMEM pass: the two-pass formulation (add,
+quantise, dequantise, subtract as separate HBM-resident ops) moves ~34
+bytes/element where the fused kernel moves ~13 (see BENCH_kernels.json).
+
 VMEM tiling: TILE quant blocks of QBLOCK elements each per grid step; both
-are multiples of the 128-lane VPU width.
+are multiples of the 128-lane VPU width.  The constants live in
+``repro.core.compression`` (single source of truth shared with the jnp
+reference path); callers pad with ``compression.pad_to_block(x, QTILE)``.
 """
 from __future__ import annotations
 
@@ -15,8 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-QBLOCK = 256       # elements sharing one scale (matches core.compression)
-TILE = 32          # quant blocks per grid step -> 8192 elements per stage
+from repro.core.compression import BLOCK as QBLOCK, TILE, QTILE
+from repro.kernels.backend import resolve_interpret
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -33,12 +41,35 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[...] = q * s_ref[...][:, None]
 
 
-def quantize_int8(x: jax.Array, *, interpret: bool = True):
-    """x: 1-D f32, length divisible by QBLOCK*TILE (callers pad).
+def _quant_ef_kernel(x_ref, e_ref, q_ref, s_ref, r_ref):
+    # one pass: corrected buffer, quantise, and the fresh rounding residual
+    x = x_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    # q is already the exact f32 value of the int8 payload, so this residual
+    # is bit-identical to the two-pass dequantise-and-subtract — PROVIDED the
+    # product is rounded before the subtract.  Compilers contract x - q*scale
+    # into an FMA (one rounding, ulp-off from the two-pass reference;
+    # optimization_barrier does NOT stop the CPU emitter); the minimum with
+    # F32_MAX is a value-identity the contraction cannot look through.
+    deq = jnp.minimum(q * scale[:, None], jnp.float32(3.4028235e38))
+    r_ref[...] = x - deq
+
+
+def _check_1d(x: jax.Array, name: str) -> None:
+    if x.ndim != 1 or x.size % QTILE != 0:
+        raise ValueError(f"{name} needs a 1-D buffer divisible by "
+                         f"QTILE={QTILE} (see compression.pad_to_block), "
+                         f"got shape {x.shape}")
+
+
+def quantize_int8(x: jax.Array, *, interpret: bool | None = None):
+    """x: 1-D f32, length divisible by QTILE (callers pad).
     Returns (q int8 [N], scales f32 [N/QBLOCK])."""
-    if x.ndim != 1 or x.size % (QBLOCK * TILE) != 0:
-        raise ValueError(f"quantize_int8 needs a 1-D buffer divisible "
-                         f"by {QBLOCK * TILE}, got shape {x.shape}")
+    _check_1d(x, "quantize_int8")
     nblk = x.size // QBLOCK
     xb = x.reshape(nblk, QBLOCK)
     grid = (nblk // TILE,)
@@ -50,17 +81,14 @@ def quantize_int8(x: jax.Array, *, interpret: bool = True):
                    pl.BlockSpec((TILE,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.int8),
                    jax.ShapeDtypeStruct((nblk,), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xb)
     return q.reshape(-1), s
 
 
 def dequantize_int8(q: jax.Array, scales: jax.Array, *,
-                    interpret: bool = True) -> jax.Array:
-    if q.ndim != 1 or q.size % (QBLOCK * TILE) != 0:
-        raise ValueError(f"dequantize_int8 needs a 1-D buffer "
-                         f"divisible by {QBLOCK * TILE}, got shape "
-                         f"{q.shape}")
+                    interpret: bool | None = None) -> jax.Array:
+    _check_1d(q, "dequantize_int8")
     nblk = q.size // QBLOCK
     qb = q.reshape(nblk, QBLOCK)
     grid = (nblk // TILE,)
@@ -71,6 +99,38 @@ def dequantize_int8(q: jax.Array, scales: jax.Array, *,
                   pl.BlockSpec((TILE,), lambda i: (i,))],
         out_specs=pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qb, scales)
     return x.reshape(-1)
+
+
+def quantize_ef_int8(x: jax.Array, ef: jax.Array, *,
+                     interpret: bool | None = None):
+    """Fused EF quantiser: quantise ``x + ef`` and emit the new residual in
+    the same VMEM pass.
+
+    x, ef: 1-D f32 of equal length divisible by QTILE (callers pad).
+    Returns (q int8 [N], scales f32 [N/QBLOCK], new_ef f32 [N]) with
+    ``new_ef = (x+ef) - q*scale`` — bit-identical to the two-pass
+    quantise/dequantise/subtract, minus two HBM round-trips.
+    """
+    _check_1d(x, "quantize_ef_int8")
+    if ef.shape != x.shape:
+        raise ValueError(f"quantize_ef_int8 needs matching shapes, got "
+                         f"x={x.shape} ef={ef.shape}")
+    nblk = x.size // QBLOCK
+    grid = (nblk // TILE,)
+    q, s, r = pl.pallas_call(
+        _quant_ef_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE,), lambda i: (i,)),
+                   pl.BlockSpec((TILE, QBLOCK), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((nblk,), jnp.float32),
+                   jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(x.reshape(nblk, QBLOCK), ef.reshape(nblk, QBLOCK))
+    return q.reshape(-1), s, r.reshape(-1)

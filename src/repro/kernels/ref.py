@@ -6,7 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-QBLOCK = 256
+from repro.core.compression import BLOCK as QBLOCK  # single source of truth
 
 
 def mha_reference(q, k, v, *, causal: bool = True,

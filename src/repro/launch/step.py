@@ -174,7 +174,10 @@ def train_in_shardings(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh):
               "step": NamedSharding(mesh, P())}
     if opt_cfg.error_feedback:
         # per-(pod, data)-shard residual even in dense mode: leading dim
-        # over the slow axis, scatter dim over 'data'
+        # over the slow axis, scatter dim over 'data'.  The shapes are the
+        # leaf shapes regardless of opt_cfg.quant_kernel — the fused Pallas
+        # quantiser pads its own input to QTILE internally, so the fused-EF
+        # buffer needs no extra sharded storage here.
         slow = "pod" if "pod" in mesh.shape else None
 
         def ef_sharding(spec, ax, leaf):

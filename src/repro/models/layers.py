@@ -255,19 +255,31 @@ _flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                       chunk_q: int = 512, chunk_k: int = 512,
-                      q_offset: int = 0) -> jax.Array:
+                      q_offset: int = 0, impl: str | None = None) -> jax.Array:
     """Flash attention (online softmax fwd, blockwise-recompute custom VJP),
     GQA-aware, never materialising an S x S buffer in fwd OR bwd.  Falls back
     to the naive oracle for ragged (test-sized) shapes.
 
-    The Pallas kernel in repro.kernels.flash_attention is the TPU-target
-    version of this exact algorithm; this jnp version is its oracle and the
-    lowering used by the CPU dry-run."""
+    ``impl``: None -> auto ("pallas" on TPU, "jnp" elsewhere).  "pallas"
+    dispatches to ``repro.kernels.flash_attention`` — fwd AND bwd are Pallas
+    kernels behind a ``jax.custom_vjp``, so training steps no longer fall
+    back to this module's jnp VJP on TPU.  "jnp" keeps the pure-jnp lowering
+    below, which doubles as the kernels' oracle and the CPU dry-run path."""
     Sq, Sk = q.shape[1], k.shape[1]
     if Sq % chunk_q or Sk % chunk_k:
         q_pos = q_offset + jnp.arange(Sq)
         return naive_attention(q, k, v, causal=causal, window=window,
                                q_pos=q_pos, k_pos=jnp.arange(Sk))
+    if impl is None:
+        from repro.kernels.backend import on_tpu  # lazy: models stay light
+        impl = "pallas" if on_tpu() else "jnp"
+    if impl == "pallas":
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal, window, chunk_q, chunk_k,
+                                  q_offset, None)
+    if impl != "jnp":
+        raise ValueError(f"chunked_attention impl must be None, 'pallas' or "
+                         f"'jnp', got {impl!r}")
     return _flash(q, k, v, causal, window, chunk_q, chunk_k, q_offset)
 
 

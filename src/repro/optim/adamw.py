@@ -49,8 +49,16 @@ class OptConfig:
     # scatters per leaf and the compressed mode's EF residual is shaped by
     # the exchange.
     bucket_bytes: float | None = None
+    # Pallas quantiser toggle for the compressed slow hop: None -> auto
+    # (fused kernel on TPU, jnp reference elsewhere); threaded through to
+    # compression.compressed_psum(use_kernel=).
+    quant_kernel: bool | None = None
 
     def __post_init__(self):
+        if (self.quant_kernel is not None
+                and self.comm_mode != "multilevel_compress"):
+            raise ValueError("quant_kernel only applies to "
+                             "comm_mode='multilevel_compress'")
         if self.bucket_bytes is not None:
             if self.bucket_bytes <= 0:
                 raise ValueError("bucket_bytes must be positive")
@@ -203,11 +211,13 @@ def _sync_shard(g, ax, slow_axis, cfg: OptConfig, ef=None):
             shp = g.shape
             if ef is not None:
                 g, new_ef = compression.compressed_psum(
-                    g.reshape(-1), slow_axis, ef=ef.reshape(-1))
+                    g.reshape(-1), slow_axis, ef=ef.reshape(-1),
+                    use_kernel=cfg.quant_kernel)
                 g, new_ef = g.reshape(shp), new_ef.reshape(shp)
             else:
                 g = compression.compressed_psum(
-                    g.reshape(-1), slow_axis).reshape(shp)
+                    g.reshape(-1), slow_axis,
+                    use_kernel=cfg.quant_kernel).reshape(shp)
         else:
             g = lax.psum(g, slow_axis)
     return g if ef is None else (g, new_ef)

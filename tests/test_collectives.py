@@ -359,3 +359,70 @@ np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
                            np.asarray(full[:, S]), atol=0.1, rtol=0.05)
 print("OK")
 """)
+
+
+def test_opt_config_quant_kernel_validation():
+    from repro.optim.adamw import OptConfig
+
+    OptConfig(comm_mode="multilevel_compress", quant_kernel=True)
+    OptConfig(comm_mode="multilevel_compress", quant_kernel=False)
+    with pytest.raises(ValueError, match="quant_kernel"):
+        OptConfig(quant_kernel=True)           # default mode: multilevel
+    with pytest.raises(ValueError, match="quant_kernel"):
+        OptConfig(comm_mode="flat", quant_kernel=False)
+
+
+def test_compress_ef_zeros_tile():
+    """tile rounds the PER-RANK shard up so the fused Pallas quantiser sees
+    a pad-free buffer; default tile=1 keeps the historic sizing."""
+    import jax.numpy as jnp
+    from repro.core.collectives import compress_ef_zeros
+    from repro.core.compression import QTILE
+
+    grads = {"w": jnp.zeros((4, 6)), "b": jnp.zeros((7,))}   # 31 elements
+    assert compress_ef_zeros(grads, 2).shape == (16,)
+    ef = compress_ef_zeros(grads, 2, tile=QTILE)
+    assert ef.shape == (QTILE,)
+    assert compress_ef_zeros(grads, 1, tile=4).shape == (32,)
+
+
+def test_allreduce_tree_ef_tile_padding(subproc):
+    """multilevel_psum_tree grows the flat buffer to ef.size * fast_degree
+    when the residual was tiled up (compress_ef_zeros tile=...), and rejects
+    residuals too small for the pytree."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.collectives import compress_ef_zeros, multilevel_psum_tree
+
+mesh = jax.make_mesh((2, 2), ("pod", "data"))
+grads = {"w": jnp.full((4, 6), 1e-4, jnp.float32),
+         "b": jnp.ones((7,), jnp.float32)}
+ef0 = compress_ef_zeros(grads, 2, tile=12)   # 31 -> pad to 48 -> shard 24
+assert ef0.shape == (24,), ef0.shape
+ef_global = jnp.tile(ef0, 4)
+
+def sync(g, e):
+    return multilevel_psum_tree(g, "pod", ("data",),
+                                mode="multilevel_compress", ef=e)
+out, ef1 = jax.jit(shard_map(
+    sync, mesh=mesh, in_specs=(P(), P(("pod", "data"))),
+    out_specs=(P(), P(("pod", "data"))), check_vma=False))(grads, ef_global)
+np.testing.assert_allclose(np.asarray(out["w"]),
+                           np.asarray(grads["w"]) * 4, atol=0.5)
+assert ef1.shape == ef_global.shape
+
+def sync_small(g, e):
+    return multilevel_psum_tree(g, "pod", ("data",),
+                                mode="multilevel_compress", ef=e)
+try:
+    jax.jit(shard_map(
+        sync_small, mesh=mesh, in_specs=(P(), P(("pod", "data"))),
+        out_specs=(P(), P(("pod", "data"))), check_vma=False))(
+        grads, jnp.zeros((4 * 8,), jnp.float32))   # shard 8 < needed 16
+    raise SystemExit("expected ValueError for too-small ef")
+except ValueError as e:
+    assert "too small" in str(e), e
+print("OK ef tile padding")
+""")
