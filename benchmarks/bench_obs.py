@@ -1,0 +1,282 @@
+"""Observability benchmark: tracing overhead, the measured-cost feedback
+loop, and a sample end-to-end Chrome trace.  Persists ``BENCH_obs.json``.
+
+Three sections:
+
+``overhead_sweep``
+    fig8 allreduce under the "auto" policy, 64 KiB–64 MiB, two modes per
+    size: ``execute`` (the lowered program through ``simulate_rounds``,
+    traced vs untraced — the tracer's raw hot-path cost) and
+    ``plan+execute`` (cold-cache ``Communicator.allreduce`` — the pipeline
+    a traced application step actually runs).  min-of-reps walls; the
+    headline asserts both 64 MiB rows stay under the 5% budget.  The
+    budget holds because tracing a live run costs ONE queued replay
+    closure per program (``repro.obs.Tracer`` defers all event recording
+    to trace-read time).
+``feedback``
+    The mis-modeled-link demo: the planner's model overstates WAN
+    bandwidth 8x, so it picks a WAN-heavy segmented plan that is 17% worse
+    ON THE TRUE NETWORK than the plan it would pick under honest costs.
+    One traced 16 MiB allreduce executed on the truth topology feeds
+    :class:`repro.obs.FeedbackLoop`; the refit recovers the true WAN
+    bandwidth from the link intervals, and the re-planned regret drops to
+    ~0 — both asserted in the headline.
+``--trace-out PATH``
+    Writes a sample trace (engine bucketed-overlap step + a small
+    continuous-batching serve run on one tracer) — the CI artifact.
+
+``--smoke`` runs a reduced sweep and checks the committed artifact's
+schema instead of overwriting it (see ``bench_schema.py``); CI runs this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import sys
+import time
+
+from repro.core import Communicator
+from repro.core.engine import Engine
+from repro.core.simulator import simulate_rounds
+from repro.core.topology import paper_fig8_topology
+from repro.obs import FeedbackLoop, Tracer
+
+KIB, MIB = 1024.0, float(1 << 20)
+FULL_SIZES = (64 * KIB, MIB, 8 * MIB, 64 * MIB)
+SMOKE_SIZES = (MIB, 64 * MIB)
+BUDGET_PCT = 5.0
+FEEDBACK_NBYTES = 16 * MIB
+WAN_OVERSTATE = 8.0
+
+
+def _paired_overhead(fn_a, fn_b, reps: int) -> tuple[float, float, float]:
+    """A/B overhead estimate robust to noisy shared machines: each rep
+    times the pair back-to-back on PROCESS CPU time (background load
+    excluded) and contributes one b/a ratio; the reported overhead is the
+    MEDIAN of the per-pair ratios, so a burst of interference that lands
+    on a single rep cannot swing the estimate.  Returns (median_a_s,
+    median_b_s, median_ratio)."""
+    ta, tb, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.process_time()
+        fn_a()
+        a = time.process_time() - t0
+        t0 = time.process_time()
+        fn_b()
+        b = time.process_time() - t0
+        ta.append(a)
+        tb.append(b)
+        ratios.append(b / a)
+    return (statistics.median(ta), statistics.median(tb),
+            statistics.median(ratios))
+
+
+def overhead_sweep(sizes, reps: int) -> list[dict]:
+    rows = []
+    topo = paper_fig8_topology()
+    comm = Communicator(topo, policy="auto", backend="sim")
+    topo.comm_level_table()  # warm the tracer's level lookup
+    for nb in sizes:
+        low = comm.plan("allreduce", nbytes=nb).lower(nb)
+        un, tr, ratio = _paired_overhead(
+            lambda: simulate_rounds(low, topo),
+            lambda: simulate_rounds(low, topo, tracer=Tracer(), label="x"),
+            reps)
+        rows.append({
+            "mode": "execute", "size_mib": nb / MIB,
+            "n_sends": len(low.sends),
+            "untraced_ms": un * 1e3, "traced_ms": tr * 1e3,
+            "overhead_pct": (ratio - 1.0) * 100.0,
+        })
+
+        plain = Communicator(paper_fig8_topology(), policy="auto",
+                             backend="sim")
+        traced = Communicator(paper_fig8_topology(), policy="auto",
+                              backend="sim", tracer=Tracer())
+
+        def cold_plain():
+            plain.clear_cache()
+            plain.allreduce(nb)
+
+        def cold_traced():
+            traced.clear_cache()
+            traced.tracer = Tracer()
+            traced.allreduce(nb)
+
+        un, tr, ratio = _paired_overhead(cold_plain, cold_traced, reps)
+        rows.append({
+            "mode": "plan+execute", "size_mib": nb / MIB,
+            "n_sends": len(low.sends),
+            "untraced_ms": un * 1e3, "traced_ms": tr * 1e3,
+            "overhead_pct": (ratio - 1.0) * 100.0,
+        })
+    return rows
+
+
+def _plan_regret(comm: Communicator, truth, op: str, nbytes: float) -> float:
+    """Time of the communicator's selected plan ON THE TRUTH topology,
+    relative to the plan a truth-informed oracle selects (also priced on
+    the truth).  0 = the model's selection is optimal despite its errors."""
+    low = comm.plan(op, nbytes=nbytes).lower(nbytes)
+    t_sel = max(simulate_rounds(low, truth).values())
+    oracle = Communicator(truth, policy=comm.policy, backend="sim")
+    best = oracle.plan(op, nbytes=nbytes).lower(nbytes)
+    t_best = max(simulate_rounds(best, truth).values())
+    return t_sel / t_best - 1.0
+
+
+def feedback_section() -> dict:
+    truth = paper_fig8_topology()
+    model = paper_fig8_topology()
+    model.levels = tuple(
+        dataclasses.replace(l, bandwidth=l.bandwidth * WAN_OVERSTATE)
+        if l.name == "wan" else l for l in model.levels)
+    comm = Communicator(model, policy="auto", backend="sim")
+    nb = FEEDBACK_NBYTES
+
+    pre_regret = _plan_regret(comm, truth, "allreduce", nb)
+    fb = FeedbackLoop(comm, threshold=0.15)
+    pred_pre, meas_pre = fb.run("allreduce", nb, truth=truth)
+    resid_pre = fb.residual_table()
+    report = fb.maybe_refit()
+    post_regret = _plan_regret(comm, truth, "allreduce", nb)
+    pred_post, meas_post = fb.run("allreduce", nb, truth=truth)
+    resid_post = fb.residual_table()
+
+    wan = next(i for i, l in enumerate(truth.levels) if l.name == "wan")
+    return {
+        "op": "allreduce", "size_mib": nb / MIB,
+        "wan_overstated_by": WAN_OVERSTATE,
+        "refit": report.refit,
+        "worst_drift": report.worst,
+        "pre": {"regret": pre_regret, "predicted_s": pred_pre,
+                "measured_s": meas_pre, "residuals": resid_pre},
+        "post": {"regret": post_regret, "predicted_s": pred_post,
+                 "measured_s": meas_post, "residuals": resid_post},
+        "wan_bandwidth_truth": truth.levels[wan].bandwidth,
+        "wan_bandwidth_refit": comm.topo.levels[wan].bandwidth,
+    }
+
+
+def write_sample_trace(path: str) -> dict:
+    """One tracer through planner, engine, simulators, and scheduler —
+    the end-to-end sample trace CI uploads."""
+    from repro.serving import SLO, Scheduler, SimExecutor, make_requests
+
+    tracer = Tracer()
+    comm = Communicator(paper_fig8_topology(), policy="auto", backend="sim",
+                        tracer=tracer)
+    # a bucketed, overlapped gradient-sync step: 8 allreduce buckets
+    # racing a fat weight broadcast under the priority policy
+    eng = Engine(comm, policy="priority", age_rate=MIB)
+    for _ in range(8):
+        eng.issue("allreduce", 2 * MIB)
+    eng.issue("bcast", 4 * MIB, root=0, priority=1.0)
+    eng.wait_all()
+    # a small continuous-batching serve run (request lifecycle spans)
+    sch = Scheduler(SimExecutor(vocab=64, block_size=4), n_blocks=17,
+                    block_size=4, max_slots=4, s_max=32,
+                    prefill_token_budget=64, policy="priority",
+                    compute_model=lambda pre, dec: 1e-3 * (1 + pre + dec),
+                    tracer=tracer)
+    sch.run(make_requests([0.0, 0.004, 0.008, 0.012], vocab=64,
+                          prompt_len=6, gen_len=4, slo=SLO(), seed=0))
+    tracer.save(path)
+    doc = tracer.to_chrome()
+    pids = sorted({e["pid"] for e in doc["traceEvents"]})
+    return {"path": path, "n_events": len(doc["traceEvents"]), "pids": pids}
+
+
+def build_doc(smoke: bool = False) -> dict:
+    sizes = SMOKE_SIZES if smoke else FULL_SIZES
+    reps = 11 if smoke else 15
+    sweep = overhead_sweep(sizes, reps)
+    fb = feedback_section()
+
+    big = [r for r in sweep if r["size_mib"] == 64.0]
+    worst_big = max(r["overhead_pct"] for r in big)
+    overhead_ok = worst_big < BUDGET_PCT
+    feedback_ok = (fb["refit"]
+                   and fb["post"]["regret"] < fb["pre"]["regret"]
+                   and fb["post"]["regret"] < 0.01)
+    headline = {
+        "overhead_pct_64mib_worst": worst_big,
+        "budget_pct": BUDGET_PCT,
+        "overhead_passed": overhead_ok,
+        "pre_refit_regret": fb["pre"]["regret"],
+        "post_refit_regret": fb["post"]["regret"],
+        "feedback_passed": feedback_ok,
+        "passed": overhead_ok and feedback_ok,
+    }
+    summary = [
+        "tracing overhead (fig8 allreduce, median pair ratio of "
+        f"{reps} reps, CPU time): worst 64 MiB row {worst_big:+.2f}% "
+        f"(budget {BUDGET_PCT:g}%: "
+        f"{'PASS' if overhead_ok else 'FAIL'})",
+    ]
+    for r in sweep:
+        summary.append(
+            f"  {r['size_mib']:g} MiB {r['mode']}: "
+            f"{r['untraced_ms']:.3f} -> {r['traced_ms']:.3f} ms "
+            f"({r['overhead_pct']:+.2f}%)")
+    wan_pre = next(x["measured_over_model"] for x in fb["pre"]["residuals"]
+                   if x["name"] == "wan")
+    wan_post = next(x["measured_over_model"] for x in fb["post"]["residuals"]
+                    if x["name"] == "wan")
+    summary.append(
+        f"feedback: wan overstated {WAN_OVERSTATE:g}x -> residual "
+        f"{wan_pre:.3f}, plan regret {fb['pre']['regret'] * 100:.1f}%; "
+        f"after refit residual {wan_post:.3f}, regret "
+        f"{fb['post']['regret'] * 100:.1f}% "
+        f"({'PASS' if feedback_ok else 'FAIL'})")
+    return {
+        "generated_by": "benchmarks/bench_obs.py",
+        "overhead_sweep": sweep,
+        "feedback": fb,
+        "headline": headline,
+        "summary": summary,
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    trace_out = None
+    if "--trace-out" in argv:
+        trace_out = argv[argv.index("--trace-out") + 1]
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_obs.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if trace_out:
+        info = write_sample_trace(trace_out)
+        print(f"# sample trace: {info['n_events']} events, "
+              f"pids {info['pids']} -> {info['path']}")
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_obs.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        if not doc["headline"]["passed"]:
+            print("observability acceptance failed:", doc["headline"],
+                  file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_obs.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_obs.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

@@ -5,11 +5,17 @@ tracking across PRs); a benchmark refactor that silently renames or drops
 keys would corrupt that trajectory.  ``--smoke`` benchmark runs regenerate a
 reduced document and compare its *shape* — recursive key structure, with all
 scalars collapsed to their kind — against the committed file.
+
+Run directly (``python benchmarks/bench_schema.py --all``) it executes every
+registered benchmark's ``--smoke`` leg in one pass — the single CI step that
+replaced one step per benchmark.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 
 # The committed artifacts this guard covers, keyed by repo-root filename.
 # A new benchmark registers here (and a `--smoke` leg in the bench-smoke CI
@@ -20,6 +26,7 @@ ARTIFACTS = {
     "BENCH_elastic.json": "benchmarks/bench_elastic.py",
     "BENCH_engine.json": "benchmarks/bench_engine.py",
     "BENCH_kernels.json": "benchmarks/bench_kernels.py",
+    "BENCH_obs.json": "benchmarks/bench_obs.py",
     "BENCH_serve.json": "benchmarks/bench_serve.py",
 }
 
@@ -72,3 +79,38 @@ def _diff(a, b, where: str, out: list[str]) -> None:
         # reduced runs; shape cannot be compared, so stay silent
     elif a != b:
         out.append(f"{where}: {a!r} -> {b!r}")
+
+
+def main(argv=None) -> int:
+    """``--all``: run every registered benchmark's ``--smoke`` leg (each one
+    schema-checks its own committed artifact and asserts its acceptance
+    criteria).  Flags specific to one benchmark (e.g. bench_obs's
+    ``--trace-out``) belong in that benchmark's own invocation."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--all" not in argv:
+        print("usage: bench_schema.py --all", file=sys.stderr)
+        return 2
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    failures = []
+    for artifact, script in sorted(ARTIFACTS.items()):
+        print(f"== {script} --smoke ({artifact})", flush=True)
+        proc = subprocess.run(
+            [sys.executable, os.path.join(root, script), "--smoke"],
+            cwd=root, env=env)
+        if proc.returncode != 0:
+            failures.append(f"{script}: exit {proc.returncode}")
+    if failures:
+        print("bench smoke failures:", file=sys.stderr)
+        for f in failures:
+            print(" ", f, file=sys.stderr)
+        return 1
+    print(f"# all {len(ARTIFACTS)} benchmark smokes passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

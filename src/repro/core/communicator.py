@@ -42,6 +42,8 @@ import math
 import os
 from typing import Any, Callable, Sequence
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import PID_PLANNER, PID_PROGRAMS
 from . import rounds as R
 from . import schedule as S
 from .simulator import simulate, simulate_rounds
@@ -438,26 +440,46 @@ class RefreshReport:
 
 
 class PlanCache:
-    """Tiny LRU keyed by (op, root, size-bucket, members, policy)."""
+    """Tiny LRU keyed by (op, root, size-bucket, members, policy).
 
-    def __init__(self, maxsize: int = 128):
+    Counters live in a :class:`repro.obs.MetricsRegistry` (the
+    communicator's, when owned by one) so cache behaviour shows up in the
+    same sink as every other layer's metrics; ``hits``/``misses``/
+    ``evictions`` remain plain-int reads, and monotonicity is now enforced
+    by the Counter type rather than promised by convention.
+    """
+
+    def __init__(self, maxsize: int = 128, *, metrics=None):
         self.maxsize = maxsize
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._hits = m.counter("comm.cache.hits")
+        self._misses = m.counter("comm.cache.misses")
+        self._evictions = m.counter("comm.cache.evictions")
         self._d: collections.OrderedDict = collections.OrderedDict()
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def get_or_build(self, key, build: Callable[[], Plan]) -> Plan:
         if key in self._d:
-            self.hits += 1
+            self._hits.inc()
             self._d.move_to_end(key)
             return self._d[key]
-        self.misses += 1
+        self._misses.inc()
         plan = build()
         self._d[key] = plan
         if len(self._d) > self.maxsize:
             self._d.popitem(last=False)
-            self.evictions += 1
+            self._evictions.inc()
         return plan
 
     def __len__(self) -> int:
@@ -465,7 +487,9 @@ class PlanCache:
 
     def clear(self) -> None:
         self._d.clear()
-        self.hits = self.misses = self.evictions = 0
+        self._hits.reset()
+        self._misses.reset()
+        self._evictions.reset()
 
     # -- surgical access (elastic repair) ------------------------------- #
     def items(self) -> list[tuple[Any, Plan]]:
@@ -483,7 +507,7 @@ class PlanCache:
         self._d.move_to_end(key)
         if len(self._d) > self.maxsize:
             self._d.popitem(last=False)
-            self.evictions += 1
+            self._evictions.inc()
 
     def invalidate(self) -> None:
         """Drop every entry but keep hit/miss statistics (unlike
@@ -523,7 +547,19 @@ class SimBackend:
 
     def run(self, op: str, plan: Plan, x, root: int) -> SimResult:
         nbytes = float(x) if OPS[op].sized else 0.0
-        completion = simulate_rounds(plan.lower(nbytes), self.comm.topo)
+        tr = self.comm.tracer
+        if tr is None:
+            completion = simulate_rounds(plan.lower(nbytes), self.comm.topo)
+            return SimResult(op, root, nbytes, completion)
+        self.comm._collective_seq += 1
+        label = f"{op}#{self.comm._collective_seq}"
+        completion = simulate_rounds(plan.lower(nbytes), self.comm.topo,
+                                     tracer=tr, label=label)
+        t1 = max(completion.values())
+        tr.span(PID_PROGRAMS, label, op, 0.0, t1,
+                {"op": op, "root": root, "nbytes": nbytes,
+                 "algorithm": plan.algorithm, "segment": plan.segment,
+                 "measured_s": t1})
         return SimResult(op, root, nbytes, completion)
 
 
@@ -742,6 +778,15 @@ class Communicator:
         explicit bytes.  Governs how ``Plan.lower`` splits payloads.
     axis : flattened mesh axis name (ppermute backend).
     slow_axis, fast_axes : mesh axis decomposition (jax backend).
+    tracer : optional :class:`repro.obs.Tracer`; when set, every planned
+        collective run by the sim backend records per-link busy intervals
+        and a span with the selected algorithm × segment and predicted
+        cost, and every ``plan()`` call emits a planner instant
+        (hit/miss + choice) on the wall-clock track.
+    metrics : optional shared :class:`repro.obs.MetricsRegistry`; the
+        communicator's counters (``comm.cache.*``, ``comm.tree_builds``,
+        ``comm.repairs``) register there.  Default: a private registry —
+        communicators never alias each other's stats unless asked to.
     """
 
     def __init__(self, topo: Topology, *, policy: Any = "auto",
@@ -753,7 +798,9 @@ class Communicator:
                  axis: str | None = None,
                  slow_axis: str | None = None,
                  fast_axes: Sequence[str] = (),
-                 cache_size: int = 128):
+                 cache_size: int = 128,
+                 tracer=None,
+                 metrics: MetricsRegistry | None = None):
         self.topo = topo
         self.policy = policy
         self.view = view
@@ -766,15 +813,29 @@ class Communicator:
         self.axis = axis
         self.slow_axis = slow_axis
         self.fast_axes = tuple(fast_axes)
-        self.tree_builds = 0
-        self.repairs = 0
-        self._cache = PlanCache(cache_size)
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._tree_builds = self.metrics.counter("comm.tree_builds")
+        self._repairs = self.metrics.counter("comm.repairs")
+        self._collective_seq = 0
+        self._cache = PlanCache(cache_size, metrics=self.metrics)
         try:
             backend_cls = BACKENDS[backend]
         except KeyError:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {sorted(BACKENDS)}") from None
         self.backend = backend_cls(self)
+
+    # Registry-backed counters behind the historical plain-int attributes.
+    # Read-only on purpose: external code asserting on these must not be
+    # able to rewind them (monotonicity is part of the stats contract).
+    @property
+    def tree_builds(self) -> int:
+        return self._tree_builds.value
+
+    @property
+    def repairs(self) -> int:
+        return self._repairs.value
 
     # -- discovery ------------------------------------------------------- #
     @classmethod
@@ -837,14 +898,35 @@ class Communicator:
                                  policy=policy, view=self.view,
                                  algorithm=self.algorithm,
                                  segment_bytes=self.segment_bytes)
-            self.tree_builds += choice.n_built
+            self._tree_builds.inc(choice.n_built)
             return Plan(spec, root, choice.tree,
                         topo=(self.view if self.view is not None
                               else self.topo),
                         members=self.members,
                         algorithm=choice.algorithm, segment=choice.segment)
 
-        return self._cache.get_or_build(key, build)
+        if self.tracer is None:
+            return self._cache.get_or_build(key, build)
+        misses_before = self._cache.misses
+        plan = self._cache.get_or_build(key, build)
+        hit = self._cache.misses == misses_before
+        tr, ts, topo = self.tracer, self.tracer.wall(), self.topo
+
+        def _instant():
+            args = {"op": op, "root": root, "nbytes": nbytes, "hit": hit,
+                    "algorithm": plan.algorithm, "segment": plan.segment}
+            if not hit and spec.sized and nbytes > 0:
+                # predicted makespan of the freshly selected plan under
+                # the communicator's cost model — the number obs.feedback
+                # compares against measured durations.  Deferred: the
+                # extra simulation runs at trace-read time.
+                args["predicted_s"] = max(
+                    simulate_rounds(plan.lower(nbytes), topo).values())
+            tr.instant(PID_PLANNER, "plan",
+                       f"plan {op} {'hit' if hit else 'miss'}", ts, args)
+
+        tr.defer_record(_instant)
+        return plan
 
     def cache_info(self) -> CacheInfo:
         c = self._cache
@@ -861,7 +943,7 @@ class Communicator:
 
     def clear_cache(self) -> None:
         self._cache.clear()
-        self.tree_builds = 0
+        self._tree_builds.reset()
 
     # -- elasticity: survive failures without a full re-plan ------------- #
     def has_quorum(self, failed: Sequence[int], quorum: float = 0.5) -> bool:
@@ -925,7 +1007,7 @@ class Communicator:
             repaired += 1
         self.members = survivors
         if dead:
-            self.repairs += 1
+            self._repairs.inc()
         return RepairReport(tuple(sorted(dead)), survivors,
                             repaired, evicted, kept)
 

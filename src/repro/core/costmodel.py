@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 __all__ = [
     "HW",
     "TPU_V5E",
@@ -25,6 +27,7 @@ __all__ = [
     "roofline_terms",
     "kernel_roofline",
     "refit_hw",
+    "link_affine_fit",
 ]
 
 
@@ -194,6 +197,42 @@ def kernel_roofline(
         out["achieved_bw_frac"] = (hbm_bytes / wall_s) / hw.hbm_bw
         out["model_over_wall"] = out["model_s"] / wall_s
     return out
+
+
+def link_affine_fit(samples, *, fallback_latency: float = 0.0,
+                    ) -> tuple[float, float]:
+    """Fit postal parameters (latency, bandwidth) to observed transfers.
+
+    ``samples`` are ``(nbytes, seconds, first)`` rows as harvested from
+    traced link intervals (:meth:`repro.obs.Tracer.link_samples`): a
+    *first* send's delivery takes ``latency + nbytes/bandwidth``, a
+    pipelined follower just ``nbytes/bandwidth`` — so the design matrix is
+    ``[first, nbytes]`` and least squares separates the intercept from the
+    slope whenever the sample set mixes firsts with followers or spans
+    more than one size.  When it does not (rank-deficient: one size, all
+    firsts), latency is pinned to ``fallback_latency`` — the caller's
+    current model value — and only bandwidth is solved; a feedback refit
+    must never *invent* a latency the data cannot identify.
+
+    Returns ``(latency_s, bandwidth_bytes_per_s)``, both clamped positive.
+    """
+    a = np.asarray([(n, t, 1.0 if f else 0.0) for n, t, f in samples],
+                   dtype=float)
+    if a.size == 0:
+        raise ValueError("link_affine_fit needs at least one sample")
+    n, t, f = a[:, 0], a[:, 1], a[:, 2]
+    X = np.stack([f, n], axis=1)
+    if np.linalg.matrix_rank(X) == 2:
+        (lat, slope), *_ = np.linalg.lstsq(X, t, rcond=None)
+        lat = max(float(lat), 0.0)
+    else:
+        lat = max(float(fallback_latency), 0.0)
+        pos = n > 0
+        if not pos.any():
+            raise ValueError("cannot fit bandwidth from zero-byte samples")
+        slope = float(np.mean((t[pos] - f[pos] * lat) / n[pos]))
+    slope = max(float(slope), 1e-30)
+    return lat, 1.0 / slope
 
 
 def refit_hw(hw: HW, *, flops_frac: float, bw_frac: float, name: str) -> HW:

@@ -57,6 +57,7 @@ __all__ = [
     "discover",
     "representative_pairs",
     "targeted_probes",
+    "synthetic_probes",
     "refit_levels",
     "measure_drift",
 ]
@@ -512,6 +513,47 @@ def targeted_probes(truth: Topology,
                      axis=1)
     inject = (ovh + s1 / bw) * jitter()
     return TargetedProbes(tuple(pairs), (s1, s2), times, inject)
+
+
+def synthetic_probes(topo: Topology,
+                     fits: "dict[int, tuple[float, float, float]]", *,
+                     sizes: Sequence[float] = DEFAULT_PROBE_SIZES,
+                     ) -> TargetedProbes:
+    """Render per-level postal fits back into a :class:`TargetedProbes`.
+
+    ``fits`` maps link-class index -> ``(latency, bandwidth, overhead)``
+    as estimated elsewhere (e.g. :func:`repro.core.costmodel.link_affine_fit`
+    over traced transfer durations).  Each fitted level gets one synthetic
+    pair whose two probe times and injection sample are the postal model
+    evaluated AT the fit, so feeding the result to :func:`refit_levels`
+    reproduces the fitted parameters exactly.
+
+    This keeps refitting single-pathed: measured feedback
+    (:mod:`repro.obs.feedback`) does not mutate :class:`Level` objects
+    itself — it speaks the same probe language as targeted re-probing, and
+    :func:`refit_levels` stays the only writer of level parameters.
+    Levels absent from ``fits`` get no pair and keep their parameters.
+    """
+    if not fits:
+        raise ValueError("synthetic_probes needs at least one fitted level")
+    bad = [l for l in fits if not 0 <= l < len(topo.levels)]
+    if bad:
+        raise ValueError(f"fitted level(s) {bad} not in topology "
+                         f"(has {len(topo.levels)} classes)")
+    s1, s2 = float(sizes[0]), float(sizes[1])
+    pairs, t1, t2, inj = [], [], [], []
+    for l in sorted(fits):
+        lat, bw, ovh = fits[l]
+        if bw <= 0:
+            raise ValueError(f"level {l}: bandwidth must be positive")
+        # the pair endpoints are carriers for the level tag (refit groups
+        # by the tag alone); (0, 1) is as good as any real pair
+        pairs.append((0, 1, l))
+        t1.append(ovh + lat + s1 / bw)
+        t2.append(ovh + lat + s2 / bw)
+        inj.append(ovh + s1 / bw)
+    return TargetedProbes(tuple(pairs), (s1, s2),
+                          np.stack([t1, t2], axis=1), np.asarray(inj))
 
 
 def refit_levels(topo: Topology, probes: TargetedProbes) -> Topology:

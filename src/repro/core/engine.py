@@ -53,8 +53,10 @@ import dataclasses
 import itertools
 from typing import Any, Sequence
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import PID_PROGRAMS
 from .communicator import OPS, Communicator, SimResult
-from .simulator import simulate_concurrent
+from .simulator import simulate_concurrent, simulate_rounds
 
 __all__ = ["Handle", "Engine", "EngineStats", "POLICIES",
            "partition_buckets", "overlapped_step_times"]
@@ -134,7 +136,8 @@ class Engine:
     """
 
     def __init__(self, comm: Communicator, *, policy: str = "fifo",
-                 now: float = 0.0, age_rate: float = 0.0):
+                 now: float = 0.0, age_rate: float = 0.0,
+                 tracer=None, metrics: MetricsRegistry | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
@@ -144,14 +147,19 @@ class Engine:
         self.policy = policy
         self.age_rate = float(age_rate)
         self.now = float(now)
+        # a traced communicator traces its engine too — one tracer covers
+        # the whole stack unless the caller splits them explicitly
+        self.tracer = tracer if tracer is not None else comm.tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._pending: list[Handle] = []
         self._hid = itertools.count()
         self._subcomms: dict[tuple[int, ...], Communicator] = {}
         self._last_finish: dict[tuple[int, ...], float] = {}
-        self._issued = 0
-        self._completed = 0
-        self._batches = 0
-        self._replanned = 0
+        self._issued = self.metrics.counter("engine.issued")
+        self._completed = self.metrics.counter("engine.completed")
+        self._batches = self.metrics.counter("engine.batches")
+        self._replanned = self.metrics.counter("engine.replanned")
+        self._wait_s = self.metrics.histogram("engine.wait_s")
         self._last_policy = policy
 
     # -- issue ----------------------------------------------------------- #
@@ -196,7 +204,7 @@ class Engine:
                    self.now if at is None else float(at), tuple(after),
                    priority)
         self._pending.append(h)
-        self._issued += 1
+        self._issued.inc()
         return h
 
     def wait(self, handle: Handle) -> SimResult:
@@ -219,11 +227,15 @@ class Engine:
             return self.comm
         sub = self._subcomms.get(members)
         if sub is None:
+            # shares the tracer (one trace for the whole engine) but NOT
+            # the metrics registry: the main communicator's counters must
+            # not move when a subset plans
             sub = Communicator(self.comm.topo, policy=self.comm.policy,
                                backend="sim", members=members,
                                view=self.comm.view,
                                algorithm=self.comm.algorithm,
-                               segment_bytes=self.comm.segment_bytes)
+                               segment_bytes=self.comm.segment_bytes,
+                               tracer=self.tracer)
             self._subcomms[members] = sub
         return sub
 
@@ -267,16 +279,23 @@ class Engine:
         if self.age_rate:
             prios = [(p, self.age_rate) for p in prios]
         topo = self.comm.topo
+        tr = self.tracer
+        labels = [f"{h.op}#{h.hid}" for h in batch] if tr is not None \
+            else None
 
-        def run(deps, priorities):
+        def run(deps, priorities, tracer=None):
+            # trace_programs=False: the engine emits its own, richer,
+            # handle spans on the same tracks below
             return simulate_concurrent(programs, topo, starts=releases,
-                                       deps=deps, priorities=priorities)
+                                       deps=deps, priorities=priorities,
+                                       tracer=tracer, labels=labels,
+                                       trace_programs=False)
 
         ran = depsets  # the dependency sets the winning schedule executed
         if policy == "fifo":
-            results, self._last_policy = run(depsets, None), "fifo"
+            results, self._last_policy = run(depsets, None, tr), "fifo"
         elif policy == "priority":
-            results, self._last_policy = run(depsets, prios), "priority"
+            results, self._last_policy = run(depsets, prios, tr), "priority"
         else:  # "sim": simulate candidate orderings, keep the best
             cands = {"fair": (depsets, None), "priority": (depsets, prios)}
             for label, order in (("serial", range(len(batch))),
@@ -290,12 +309,15 @@ class Engine:
                 cands[label] = (chained, None)
             best = None
             for label, (deps, pr) in cands.items():
-                res = run(deps, pr)
+                res = run(deps, pr)  # candidates stay untraced: only the
+                for_pr = pr         # winner's traffic really "happened"
                 makespan = max(max(c.values()) for c in res)
                 if best is None or makespan < best[0]:
-                    best = (makespan, label, res, deps)
+                    best = (makespan, label, res, deps, for_pr)
             results, self._last_policy = best[2], f"sim:{best[1]}"
             ran = best[3]
+            if tr is not None:
+                run(best[3], best[4], tr)  # deterministic re-run to record
 
         finishes = [max(c.values()) for c in results]
         for i, h in enumerate(batch):
@@ -305,9 +327,38 @@ class Engine:
             h.finished = finishes[i]
             self._last_finish[h.members] = max(
                 self._last_finish.get(h.members, 0.0), finishes[i])
+            self._wait_s.observe(h.started - h.at)
         self.now = max(self.now, max(finishes))
-        self._completed += len(batch)
-        self._batches += 1
+        self._completed.inc(len(batch))
+        self._batches.inc()
+        if tr is not None:
+            for i, h in enumerate(batch):
+                lb = labels[i]
+                if h.started > h.at:
+                    tr.span(PID_PROGRAMS, lb, "queued", h.at, h.started,
+                            {"reason": "release+deps"})
+
+                def _span(lb=lb, h=h, prog=programs[i],
+                          pr=(prios[i] if isinstance(prios[i], float)
+                              else prios[i][0]),
+                          t0=h.started, t1=h.finished):
+                    # isolated (contention-free) makespan of this handle's
+                    # program = the plan's predicted cost; the gap to
+                    # measured is what obs.feedback aggregates.  Deferred:
+                    # the extra simulation runs at trace-read time, not on
+                    # the engine's critical path.
+                    pred = max(simulate_rounds(prog, topo).values())
+                    tr.span(PID_PROGRAMS, lb, h.op, t0, t1,
+                            {"op": h.op, "nbytes": h.nbytes,
+                             "members": len(h.members),
+                             "priority": pr,
+                             "predicted_s": pred,
+                             "measured_s": t1 - t0})
+
+                tr.defer_record(_span)
+            tr.instant(PID_PROGRAMS, "engine", f"flush {self._last_policy}",
+                       self.now, {"policy": self._last_policy,
+                                  "batch": len(batch)})
         return batch
 
     # -- elasticity ------------------------------------------------------ #
@@ -355,13 +406,14 @@ class Engine:
             h.members = survivors
             if h.root not in survivors:
                 h.root = survivors[0]
-            self._replanned += 1
+            self._replanned.inc()
         return report
 
     # -- introspection --------------------------------------------------- #
     def stats(self) -> EngineStats:
-        return EngineStats(self._issued, self._completed, self._batches,
-                           self._replanned, self._last_policy, self.now)
+        return EngineStats(self._issued.value, self._completed.value,
+                           self._batches.value, self._replanned.value,
+                           self._last_policy, self.now)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Engine(policy={self.policy!r}, pending="

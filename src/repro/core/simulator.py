@@ -41,8 +41,14 @@ import heapq
 import math
 from typing import Mapping, Sequence
 
+from ..obs.trace import PID_PROGRAMS
 from .schedule import Direction, Schedule
 from .topology import Topology
+
+# Critical-path instants carry at most this many edges: enough to read the
+# bottleneck chain in a viewer, bounded so a 64-segment pipelined transfer
+# cannot bloat the trace.
+_CRIT_PATH_CAP = 64
 
 __all__ = ["simulate", "simulate_rounds", "simulate_concurrent",
            "simulate_op", "probe_time"]
@@ -125,6 +131,7 @@ def _run_up(phase, topo: Topology, prev: dict[int, float]) -> dict[int, float]:
 
 def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
                     fail_at: dict[int, float] | None = None,
+                    *, tracer=None, label: str | None = None,
                     ) -> dict[int, float]:
     """Execute a :class:`~repro.core.rounds.Lowered` program on ``topo``.
 
@@ -146,63 +153,123 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
     handed to :func:`simulate_concurrent` (all released at ``start``, fair
     link sharing) and a list of per-program completion dicts is returned.
     ``fail_at`` is a single-program feature and is rejected there.
+
+    With a ``tracer`` (:class:`repro.obs.Tracer`), every delivered send is
+    recorded as a busy interval on its directed edge and the program's
+    critical path (the chain of sends whose gates determined the last
+    delivery) is emitted as an instant on track ``label``.  Tracing never
+    perturbs the computed times — the timing code is byte-for-byte the
+    untraced path.
     """
     if isinstance(lowered, (list, tuple)):
         if fail_at:
             raise ValueError("fail_at is not supported for concurrent "
                              "programs; inject failures per single program")
-        return simulate_concurrent(lowered, topo,
-                                   starts=[start] * len(lowered))
+        return simulate_concurrent(
+            lowered, topo, starts=[start] * len(lowered), tracer=tracer,
+            labels=[label] * len(lowered) if label is not None else None)
+    if tracer is not None and tracer.defer:
+        # zero-cost tracing on the live run: queue a deterministic replay
+        # (this exact call, inline-recording) for when the trace is read,
+        # and execute untraced now.  Both runs compute identical times.
+        fa = dict(fail_at) if fail_at else None
+        tracer.defer_record(
+            lambda tr=tracer: simulate_rounds(lowered, topo, start, fa,
+                                              tracer=tr, label=label))
+        tracer = None
     death = fail_at or {}
     sender_free: dict[int, float] = {}
     recv_free: dict[int, float] = {}
     delivered: list[float] = []
     completion = {r: start for r in lowered.members}
 
-    for snd in lowered.sends:
-        lvl = topo.level_of_edge(snd.src, snd.dst)
-        t0 = max(start, sender_free.get(snd.src, start),
-                 *(delivered[d] for d in snd.deps)) if snd.deps else \
-            max(start, sender_free.get(snd.src, start))
+    trace = tracer is not None
+    if trace:
+        # hot-path discipline: one pre-built tuple appended per delivered
+        # send (plain-list level table, bound append) — the <5% tracing
+        # overhead budget asserted by benchmarks/bench_obs.py lives here
+        lvltab = topo.comm_level_table()
+        lappend = tracer.links.append
+        plabel = label if label is not None else "collective"
+        cause: list[int | None] = []    # gate that set each send's t0
+        last_send_of: dict[int, int] = {}
+        last_fold_of: dict[int, int] = {}
+
+    for i, snd in enumerate(lowered.sends):
+        src, dst = snd.src, snd.dst
+        lvl = topo.level_of_edge(src, dst)
+        sf = sender_free.get(src, start)
+        t0 = max(start, sf, *(delivered[d] for d in snd.deps)) \
+            if snd.deps else max(start, sf)
         xfer = snd.nbytes / lvl.bandwidth
         inject_end = t0 + xfer + (lvl.overhead if snd.first else 0.0)
         arrival = t0 + xfer + (lvl.latency if snd.first else 0.0)
+        if trace:
+            c = None
+            if t0 > start and sf == t0:
+                c = last_send_of.get(src)
+            for d in snd.deps:
+                if delivered[d] == t0:
+                    c = d
+            cause.append(c)
         if death and (t0 == math.inf
-                      or inject_end > death.get(snd.src, math.inf)
-                      or arrival > death.get(snd.dst, math.inf)):
+                      or inject_end > death.get(src, math.inf)
+                      or arrival > death.get(dst, math.inf)):
             # lost: deps never delivered, sender died mid-injection, or
             # receiver died before arrival.  A live sender blocked on lost
             # data waits forever; downstream consumers inherit the loss.
             delivered.append(math.inf)
-            if snd.src not in death:
+            if src not in death:
                 if t0 == math.inf:
-                    completion[snd.src] = math.inf
+                    completion[src] = math.inf
                 else:  # injected into a dead peer: the NIC time is real
-                    sender_free[snd.src] = inject_end
-                    completion[snd.src] = max(completion[snd.src],
-                                              inject_end)
-            elif t0 == math.inf or inject_end > death[snd.src]:
+                    sender_free[src] = inject_end
+                    completion[src] = max(completion[src], inject_end)
+            elif t0 == math.inf or inject_end > death[src]:
                 # the dying rank's NIC never frees: its LATER queued sends
                 # must not jump the FIFO and get spuriously delivered
-                sender_free[snd.src] = math.inf
+                sender_free[src] = math.inf
             else:  # lost to the receiver's death; sender still alive here
-                sender_free[snd.src] = inject_end
-            if snd.dst not in death:
-                completion[snd.dst] = math.inf
+                sender_free[src] = inject_end
+            if dst not in death:
+                completion[dst] = math.inf
             continue
-        sender_free[snd.src] = inject_end
+        sender_free[src] = inject_end
         if snd.kind == "reduce":
             # folds drain sequentially at the receiver (postal occupancy)
-            done = max(arrival, recv_free.get(snd.dst, start)) + lvl.overhead
-            recv_free[snd.dst] = done
+            done = max(arrival, recv_free.get(dst, start)) + lvl.overhead
+            recv_free[dst] = done
         else:
             done = arrival
         delivered.append(done)
-        completion[snd.src] = max(completion[snd.src], sender_free[snd.src])
-        completion[snd.dst] = max(completion[snd.dst], done)
+        if trace:
+            lappend((src, dst, lvltab[src][dst], t0, arrival,
+                     snd.nbytes, snd.kind, snd.first, plabel))
+            if snd.kind == "reduce":
+                if done - lvl.overhead > arrival:
+                    # queued behind the receiver's fold drain: the delivery
+                    # chain runs through the previous fold, not our injection
+                    cause[i] = last_fold_of.get(dst, cause[i])
+                last_fold_of[dst] = i
+            last_send_of[src] = i
+        completion[src] = max(completion[src], inject_end)
+        completion[dst] = max(completion[dst], done)
     for r, t in death.items():
         if r in completion:
             completion[r] = min(completion[r], t)
+    if trace and delivered:
+        end = max((t for t in delivered if t != math.inf), default=None)
+        if end is not None:
+            k: int | None = delivered.index(end)
+            path = []
+            while k is not None and len(path) < _CRIT_PATH_CAP:
+                s = lowered.sends[k]
+                path.append(f"{s.src}->{s.dst}")
+                k = cause[k]
+            path.reverse()
+            tracer.instant(PID_PROGRAMS, plabel, "critical_path", end,
+                           {"edges": path, "hops": len(path),
+                            "length_s": end - start})
     return completion
 
 
@@ -217,6 +284,9 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
                         starts: Sequence[float] | None = None,
                         deps: "Mapping[int, Sequence[int]] | Sequence[Sequence[int]] | None" = None,
                         priorities: Sequence[float] | None = None,
+                        tracer=None,
+                        labels: Sequence[str | None] | None = None,
+                        trace_programs: bool = True,
                         ) -> list[dict[int, float]]:
     """Execute several ``Lowered`` programs concurrently on ``topo``.
 
@@ -255,7 +325,30 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
     (charged once at flow end for ``first`` sends), and reduce messages
     still drain sequentially at the receiver — both exactly as in the
     single-program executor.
+
+    With a ``tracer``, every completed transfer becomes a busy interval on
+    its directed edge (labelled by ``labels[j]``), each program gets a
+    release→finish span on :data:`~repro.obs.PID_PROGRAMS` (suppressed
+    with ``trace_programs=False`` when the caller — the engine — emits its
+    own richer handle spans on the same tracks) and a critical-path
+    instant walking the chain of gates that produced the last delivery.
+    Tracing is observation only: completion times are identical with and
+    without it.
     """
+    if tracer is not None and tracer.defer:
+        # as in simulate_rounds: snapshot the arguments, queue an inline
+        # replay for trace-read time, run untraced now
+        ps = list(programs)
+        ss = None if starts is None else list(starts)
+        dd = (dict(deps) if isinstance(deps, Mapping)
+              else None if deps is None else [list(d) for d in deps])
+        pr = None if priorities is None else list(priorities)
+        lb = None if labels is None else list(labels)
+        tracer.defer_record(
+            lambda tr=tracer: simulate_concurrent(
+                ps, topo, starts=ss, deps=dd, priorities=pr, tracer=tr,
+                labels=lb, trace_programs=trace_programs))
+        tracer = None
     progs = list(programs)
     K = len(progs)
     rel = list(starts) if starts is not None else [0.0] * K
@@ -297,6 +390,7 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
     lvl_of = [None] * n
     gdeps: list[tuple[int, ...]] = [()] * n
     fifo_next: list[int | None] = [None] * n
+    fifo_prev: list[int | None] = [None] * n
     rev: list[list[int]] = [[] for _ in range(n)]
     fold_chain: dict[tuple[int, int], list[int]] = {}
     for j, p in enumerate(progs):
@@ -312,6 +406,7 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
             prev = last_of_src.get(snd.src)
             if prev is not None:
                 fifo_next[prev] = g
+                fifo_prev[g] = prev
             last_of_src[snd.src] = g
             if snd.kind == "reduce":
                 fold_chain.setdefault((j, snd.dst), []).append(g)
@@ -341,6 +436,14 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
     chain_ptr: dict[tuple[int, int], int] = {k: 0 for k in fold_chain}
     edge_active: dict[tuple[int, int], list[int]] = {}
 
+    trace = tracer is not None
+    if trace:
+        lvltab = topo.comm_level_table()
+        lab = [labels[j] if labels is not None and labels[j] is not None
+               else f"prog{j}" for j in range(K)]
+        astart = [0.0] * n             # first activation (flow start)
+        cause: list[int | None] = [None] * n   # gate that set each t0
+
     events: list[tuple[float, int, int, int]] = []
     seq = 0
 
@@ -356,9 +459,13 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
         st = sender_term[g]
         if st is not None and st > t0:
             t0 = st
+            if trace:
+                cause[g] = fifo_prev[g]
         for d in gdeps[g]:
             if delivered[d] > t0:  # type: ignore[operator]
                 t0 = delivered[d]
+                if trace:
+                    cause[g] = d
         remaining[g] = send_of[g].nbytes
         push(t0, _ACTIVATE, g)
 
@@ -424,6 +531,10 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
         while p < len(chain) and arrived[chain[p]] is not None:
             g = chain[p]
             rf = recv_free.get(key, rel[j])
+            if trace and p > 0 and rf > arrived[g]:
+                # delivery waited on the receiver's fold drain: the chain
+                # runs through the previous fold, not our own injection
+                cause[g] = chain[p - 1]
             t = max(arrived[g], rf) + lvl_of[g].overhead
             recv_free[key] = t
             deliver(g, t)
@@ -432,6 +543,28 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
 
     def finalize(j: int) -> None:
         finish[j] = max(completion[j].values())  # type: ignore[union-attr]
+        if trace:
+            if trace_programs:
+                tracer.span(PID_PROGRAMS, lab[j], lab[j], rel[j], finish[j],
+                            {"sends": len(progs[j].sends),
+                             "members": len(progs[j].members)})
+            best, bt = None, -math.inf
+            for i in range(off[j], off[j + 1]):
+                d = delivered[i]
+                if d is not None and d > bt:
+                    best, bt = i, d
+            if best is not None:
+                path = []
+                k: int | None = best
+                while k is not None and len(path) < _CRIT_PATH_CAP:
+                    s = send_of[k]
+                    path.append(f"{s.src}->{s.dst}")
+                    k = cause[k]
+                path.reverse()
+                tracer.instant(PID_PROGRAMS, lab[j], "critical_path",
+                               finish[j],
+                               {"edges": path, "hops": len(path),
+                                "length_s": finish[j] - rel[j]})
         for k in rdeps[j]:
             pdep_left[k] -= 1
             if pdep_left[k] == 0:
@@ -475,6 +608,8 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
             edge_active.setdefault(e, []).append(g)
             active[g] = True
             last_t[g] = t
+            if trace:
+                astart[g] = t
             reshare(e, t)
             continue
         if not active[g] or flow_end[g] != t:
@@ -496,6 +631,10 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
             sender_term[nx] = inject_end
             gate_down(nx)
         arrival = t + (lvl.latency if snd.first else 0.0)
+        if trace:
+            tracer.link(snd.src, snd.dst, lvltab[snd.src][snd.dst],
+                        astart[g], arrival, snd.nbytes, snd.kind, snd.first,
+                        lab[j])
         if snd.kind == "reduce":
             arrived[g] = arrival
             drain_folds(j, snd.dst)

@@ -19,8 +19,11 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch.mesh import make_test_mesh, mesh_communicator
 from repro.models import transformer as T
+from repro.obs import Tracer, get_logger, set_json
 from repro.serving import (JaxExecutor, Scheduler, SLO, make_requests,
                            poisson_arrivals, default_compute_model)
+
+log = get_logger("serve")
 
 
 def _weight_bytes(params) -> float:
@@ -50,25 +53,32 @@ def _engine_demo(wcomm, wbytes: float, cfg, prompt_len: int, model: int,
         Engine(wcomm).issue("allgather", req_bytes / model,
                             members=replicas[r % len(replicas)]).wait().time
         for r in range(n_requests))
-    print(f"[serve] engine batch (1 weight bcast + {n_requests} request "
-          f"gathers): makespan {lat['priority'][0]*1e3:.2f} ms vs "
-          f"{serial*1e3:.2f} ms serialized; mean request latency "
-          f"{lat['priority'][1]*1e3:.3f} ms (priority) vs "
-          f"{lat['fifo'][1]*1e3:.3f} ms (fifo)")
+    log.info(f"engine batch (1 weight bcast + {n_requests} request "
+             f"gathers): makespan {lat['priority'][0]*1e3:.2f} ms vs "
+             f"{serial*1e3:.2f} ms serialized; mean request latency "
+             f"{lat['priority'][1]*1e3:.3f} ms (priority) vs "
+             f"{lat['fifo'][1]*1e3:.3f} ms (fifo)",
+             event="engine_demo",
+             makespan_ms=lat["priority"][0] * 1e3,
+             serial_ms=serial * 1e3,
+             mean_latency_priority_ms=lat["priority"][1] * 1e3,
+             mean_latency_fifo_ms=lat["fifo"][1] * 1e3)
 
 
 def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
           mesh_spec: str = "1x2x2", smoke: bool = True, *,
           policy: str = "priority", block_size: int = 8,
-          rate: float | None = None) -> dict:
+          rate: float | None = None, trace: str | None = None) -> dict:
     """Run ``n_requests`` through the continuous-batching scheduler on a
     host-device demo mesh (paged KV cache, real greedy decoding).
 
     ``rate``: open-loop Poisson arrival rate (req/s of *simulation* time);
-    default: all requests arrive at t=0 (closed batch)."""
+    default: all requests arrive at t=0 (closed batch).  ``trace`` writes
+    a Chrome trace (request lifecycles, engine spans, link occupancy)."""
     cfg = get_config(arch, smoke=smoke)
     pods, data, model = (int(x) for x in mesh_spec.split("x"))
     mesh = make_test_mesh(pods, data, model)
+    tracer = Tracer() if trace else None
     s_max = prompt_len + gen_len
     s_max += (-s_max) % block_size
 
@@ -81,11 +91,15 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
     # exactly once (paper §3.2); on a one-host demo we surface the plan and
     # its postal-model estimate rather than shipping real bytes.
     wcomm = mesh_communicator(mesh, backend="sim", policy="paper")
-    print(f"[serve] {wcomm.describe()}; weight bcast "
-          f"({wbytes/1e6:.1f} MB): est "
-          f"{wcomm.bcast(wbytes, root=0).time*1e3:.2f} ms, "
-          f"{wcomm.slow_crossings('bcast', nbytes=wbytes)} slow-link "
-          f"crossing(s)")
+    if tracer is not None:
+        wcomm.tracer = tracer
+    bcast_est = wcomm.bcast(wbytes, root=0).time
+    crossings = wcomm.slow_crossings('bcast', nbytes=wbytes)
+    log.info(f"{wcomm.describe()}; weight bcast "
+             f"({wbytes/1e6:.1f} MB): est {bcast_est*1e3:.2f} ms, "
+             f"{crossings} slow-link crossing(s)",
+             event="setup", weight_mb=wbytes / 1e6,
+             bcast_est_ms=bcast_est * 1e3, slow_crossings=crossings)
 
     replicas = [tuple(range(g * model, (g + 1) * model))
                 for g in range(pods * data)]
@@ -127,12 +141,22 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
     gen = np.stack([np.asarray(r.tokens, np.int32)
                     for r in sorted(reqs, key=lambda r: r.rid)])
     s = report.summary()
-    print(f"[serve] {s['n_done']}/{s['n_requests']} done "
-          f"({s['n_shed']} shed) in {report.steps} steps / "
-          f"{report.now*1e3:.1f} ms simulated; TTFT p50 "
-          f"{s['ttft_p50_s']*1e3:.2f} ms p99 {s['ttft_p99_s']*1e3:.2f} ms; "
-          f"per-token p50 {s['tpot_p50_s']*1e3:.3f} ms; "
-          f"max concurrent {report.max_concurrent}")
+    log.info(f"{s['n_done']}/{s['n_requests']} done "
+             f"({s['n_shed']} shed) in {report.steps} steps / "
+             f"{report.now*1e3:.1f} ms simulated; TTFT p50 "
+             f"{s['ttft_p50_s']*1e3:.2f} ms p99 {s['ttft_p99_s']*1e3:.2f} ms; "
+             f"per-token p50 {s['tpot_p50_s']*1e3:.3f} ms; "
+             f"max concurrent {report.max_concurrent}",
+             event="report", n_done=s["n_done"], n_shed=s["n_shed"],
+             steps=report.steps, simulated_ms=report.now * 1e3,
+             ttft_p50_ms=s["ttft_p50_s"] * 1e3,
+             ttft_p99_ms=s["ttft_p99_s"] * 1e3,
+             tpot_p50_ms=s["tpot_p50_s"] * 1e3,
+             max_concurrent=report.max_concurrent)
+    if tracer is not None:
+        tracer.save(trace)
+        log.info(f"trace: {tracer.n_events()} events -> {trace}",
+                 event="trace", path=trace, events=tracer.n_events())
     return {"generated": gen, "seconds": dt,
             "tokens_per_s": n_requests * gen_len / dt,
             "report": s}
@@ -149,12 +173,23 @@ def main() -> None:
                     choices=("fifo", "priority", "slo"))
     ap.add_argument("--rate", type=float, default=None,
                     help="open-loop arrival rate (req/s); default: closed batch")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON object per log line instead of the "
+                         "human format")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace of the serving run "
+                         "(open in chrome://tracing or Perfetto)")
     args = ap.parse_args()
+    set_json(args.log_json)
     out = serve(args.arch, args.requests, args.prompt_len, args.gen_len,
-                args.mesh, policy=args.policy, rate=args.rate)
-    print(f"[serve] generated {out['generated'].shape} tokens in "
-          f"{out['seconds']:.2f}s ({out['tokens_per_s']:.1f} tok/s)")
-    print("[serve] first request:", out["generated"][0][:16])
+                args.mesh, policy=args.policy, rate=args.rate,
+                trace=args.trace)
+    log.info(f"generated {out['generated'].shape} tokens in "
+             f"{out['seconds']:.2f}s ({out['tokens_per_s']:.1f} tok/s)",
+             event="done", shape=list(out["generated"].shape),
+             seconds=out["seconds"], tokens_per_s=out["tokens_per_s"])
+    log.info(f"first request: {out['generated'][0][:16]}",
+             event="sample", tokens=out["generated"][0][:16].tolist())
 
 
 if __name__ == "__main__":

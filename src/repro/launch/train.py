@@ -27,9 +27,12 @@ from repro.launch import step as STEP
 from repro.launch.mesh import (make_test_mesh, make_production_mesh,
                                mesh_communicator)
 from repro.models import transformer as T
+from repro.obs import Tracer, get_logger, set_json
 from repro.optim.adamw import OptConfig, init_opt_state
 from repro.runtime.fault_tolerance import (FailureInjector, StragglerMonitor,
                                            plan_recovery, pod_member_ranks)
+
+log = get_logger("train")
 
 
 def build_mesh(spec: str):
@@ -77,21 +80,23 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
           comm: str, zero1: bool, ckpt_dir: str, ckpt_every: int,
           fail_at: dict[int, list[int]] | None = None,
           smoke: bool = True, log_every: int = 10,
-          bucket_mb: float = 0.0) -> dict:
+          bucket_mb: float = 0.0, trace: str | None = None) -> dict:
     """Returns summary metrics; restarts from the latest checkpoint if one
     exists (crash-consistent resume).
 
     ``bucket_mb`` > 0 switches the gradient sync to size-targeted buckets
     (reverse-layer order, one fused collective per bucket — overlappable
     with backward); forces the dense optimizer state since ZeRO-1 scatters
-    per leaf."""
+    per leaf.  ``trace`` writes a Chrome trace of the simulated planning
+    plane (per-link occupancy, planner decisions) to that path."""
     cfg = get_config(arch, smoke=smoke)
     shape = ShapeSpec("custom", "train", seq, batch)
     mesh = build_mesh(mesh_spec)
     bucket_bytes = bucket_mb * 2 ** 20 if bucket_mb > 0 else None
+    tracer = Tracer() if trace else None
     if bucket_bytes and zero1 and comm != "flat":
-        print("[train] bucketed sync: forcing zero1=False (ZeRO-1 "
-              "scatters per leaf)")
+        log.info("bucketed sync: forcing zero1=False (ZeRO-1 "
+                 "scatters per leaf)", event="config")
         zero1 = False
     opt_cfg = OptConfig(comm_mode=comm, zero1=zero1, lr=1e-3,
                         warmup_steps=20, total_steps=steps,
@@ -109,7 +114,8 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
     # plans splice out the dead ranks) instead of being re-created
     from repro.core import Communicator
     from repro.launch.mesh import dp_topology
-    sim = Communicator(dp_topology(mesh), policy="paper", backend="sim")
+    sim = Communicator(dp_topology(mesh), policy="paper", backend="sim",
+                       tracer=tracer)
 
     def setup(mesh):
         # the single topology-aware entry point: gradient sync decomposes
@@ -119,10 +125,13 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
         # the gradient (the sync moves 1/model_size of the bytes per slice)
         lbytes = STEP.layer_grad_bytes(cfg, mesh.shape.get("model", 1))
         slice_bytes = sum(lbytes)
-        print(f"[train] {mcomm.describe()}; grad sync mode '{comm}': "
-              f"est {sim.allreduce(slice_bytes).time*1e3:.1f} ms/step, "
-              f"{sim.slow_crossings('allreduce', nbytes=slice_bytes)} "
-              f"slow-link crossing(s)")
+        est_s = sim.allreduce(slice_bytes).time
+        crossings = sim.slow_crossings('allreduce', nbytes=slice_bytes)
+        log.info(f"{mcomm.describe()}; grad sync mode '{comm}': "
+                 f"est {est_s*1e3:.1f} ms/step, "
+                 f"{crossings} slow-link crossing(s)",
+                 event="setup", mode=comm, est_ms=est_s * 1e3,
+                 slow_crossings=crossings)
         if bucket_bytes:
             # overlapped-sync estimate through the async engine, at the
             # communication-bound threshold (backward compute ~ sync time,
@@ -133,11 +142,16 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
                 sim, lbytes,
                 [t_comm * b / slice_bytes for b in lbytes],
                 bucket_bytes=bucket_bytes)
-            print(f"[train] bucketed sync ({bucket_mb:g} MiB x "
-                  f"{est['n_buckets']} buckets): overlapped est "
-                  f"{est['overlapped_s']*1e3:.1f} ms/step vs serial "
-                  f"{est['serial_s']*1e3:.1f} ms "
-                  f"({est['speedup']:.2f}x, balanced-compute model)")
+            log.info(f"bucketed sync ({bucket_mb:g} MiB x "
+                     f"{est['n_buckets']} buckets): overlapped est "
+                     f"{est['overlapped_s']*1e3:.1f} ms/step vs serial "
+                     f"{est['serial_s']*1e3:.1f} ms "
+                     f"({est['speedup']:.2f}x, balanced-compute model)",
+                     event="bucketed_estimate",
+                     n_buckets=est["n_buckets"],
+                     overlapped_ms=est["overlapped_s"] * 1e3,
+                     serial_ms=est["serial_s"] * 1e3,
+                     speedup=est["speedup"])
         fn = jax.jit(STEP.make_train_fn(cfg, opt_cfg, mesh, comm=mcomm),
                      donate_argnums=(0, 1))
         p_sh, o_sh, b_sh = STEP.train_in_shardings(cfg, opt_cfg, mesh)
@@ -155,7 +169,8 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
         state = ckpt.restore(latest, {"params": params_host, "opt": opt_host})
         params_host, opt_host = state["params"], state["opt"]
         start = latest + 1
-        print(f"[train] resumed from checkpoint step {latest}")
+        log.info(f"resumed from checkpoint step {latest}",
+                 event="resume", step=latest)
 
     params = jax.device_put(params_host, p_sh)
     opt = jax.device_put(opt_host, o_sh)
@@ -178,19 +193,24 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
                                      list(plan.lost_pods))
                     if r < len(sim.members)]
             in_place = plan.changed and sim.has_quorum(dead)
-            print(f"[train] step {step_i}: pods {failed} failed -> "
-                  f"mesh {plan.old_shape} -> {plan.new_shape}, "
-                  f"accum x{plan.accum_factor} "
-                  f"({'in-place repair' if in_place else 'restart'})")
+            log.info(f"step {step_i}: pods {failed} failed -> "
+                     f"mesh {plan.old_shape} -> {plan.new_shape}, "
+                     f"accum x{plan.accum_factor} "
+                     f"({'in-place repair' if in_place else 'restart'})",
+                     event="failure", step=step_i, failed=list(failed),
+                     accum=plan.accum_factor, in_place=in_place)
             if plan.changed and plan.new_shape[0] >= 1:
                 mesh = build_mesh("x".join(map(str, plan.new_shape))
                                   if len(plan.new_shape) == 3 else mesh_spec)
                 if in_place:
                     rep = sim.repair(failed=dead)
                     repairs += 1
-                    print(f"[train] repair: {rep.repaired} plan(s) spliced "
-                          f"in place, {rep.evicted} evicted, {rep.kept} "
-                          f"kept; {len(rep.members)} dp rank(s) remain")
+                    log.info(f"repair: {rep.repaired} plan(s) spliced "
+                             f"in place, {rep.evicted} evicted, {rep.kept} "
+                             f"kept; {len(rep.members)} dp rank(s) remain",
+                             event="repair", step=step_i,
+                             repaired=rep.repaired, evicted=rep.evicted,
+                             kept=rep.kept, survivors=len(rep.members))
                 else:
                     # full restart: the old membership (and its rank
                     # translation) is void — re-plan on the new mesh
@@ -240,18 +260,25 @@ def train(arch: str, steps: int, mesh_spec: str, seq: int, batch: int,
 
         dt = time.monotonic() - t0
         if straggler.observe(step_i, dt):
-            print(f"[train] step {step_i}: straggler ({dt:.2f}s vs median "
-                  f"{straggler.median:.2f}s) — bounded-staleness drop logged")
+            log.info(f"step {step_i}: straggler ({dt:.2f}s vs median "
+                     f"{straggler.median:.2f}s) — bounded-staleness drop "
+                     f"logged", event="straggler", step=step_i, dt_s=dt,
+                     median_s=straggler.median)
         if ckpt_every and step_i % ckpt_every == 0 and step_i > start:
             params_host = jax.tree.map(np.asarray, params)
             opt_host = jax.tree.map(np.asarray, opt)
             ckpt.save(step_i, {"params": params_host, "opt": opt_host})
         if step_i % log_every == 0:
-            print(f"[train] step {step_i:5d} loss {losses[-1]:.4f} "
-                  f"({dt*1e3:.0f} ms)")
+            log.info(f"step {step_i:5d} loss {losses[-1]:.4f} "
+                     f"({dt*1e3:.0f} ms)", event="step", step=step_i,
+                     loss=losses[-1], dt_ms=dt * 1e3)
         step_i += 1
 
     ckpt.wait()
+    if tracer is not None:
+        tracer.save(trace)
+        log.info(f"trace: {tracer.n_events()} events -> {trace}",
+                 event="trace", path=trace, events=tracer.n_events())
     return {"losses": losses, "recoveries": recoveries,
             "repairs": repairs,
             "stragglers": len(straggler.dropped_steps),
@@ -275,13 +302,24 @@ def main() -> None:
     ap.add_argument("--bucket-mb", type=float, default=0.0,
                     help="size-targeted gradient buckets (MiB); 0 = one "
                          "monolithic sync")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON object per log line instead of the "
+                         "human format")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace of the planning plane "
+                         "(open in chrome://tracing or Perfetto)")
     args = ap.parse_args()
+    set_json(args.log_json)
     out = train(args.arch, args.steps, args.mesh, args.seq, args.batch,
                 args.comm, not args.no_zero1, args.ckpt_dir, args.ckpt_every,
-                smoke=not args.full_config, bucket_mb=args.bucket_mb)
-    print(f"[train] done: final_loss={out['final_loss']:.4f} "
-          f"recoveries={out['recoveries']} repairs={out['repairs']} "
-          f"stragglers={out['stragglers']}")
+                smoke=not args.full_config, bucket_mb=args.bucket_mb,
+                trace=args.trace)
+    log.info(f"done: final_loss={out['final_loss']:.4f} "
+             f"recoveries={out['recoveries']} repairs={out['repairs']} "
+             f"stragglers={out['stragglers']}",
+             event="done", final_loss=out["final_loss"],
+             recoveries=out["recoveries"], repairs=out["repairs"],
+             stragglers=out["stragglers"])
 
 
 if __name__ == "__main__":

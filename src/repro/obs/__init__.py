@@ -1,0 +1,44 @@
+"""Observability: tracing, metrics, structured logs, measured-cost feedback.
+
+``repro.core`` imports :mod:`repro.obs.metrics` (the registry backs
+``Communicator.stats()``), and :mod:`repro.obs.feedback` imports
+``repro.core`` (it drives ``discovery.refit_levels``).  To keep that pair
+acyclic this package eagerly exposes only the leaf modules — ``feedback``
+is loaded on first attribute access.
+"""
+from __future__ import annotations
+
+from .log import get_logger, set_json
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, percentile
+from .trace import (PID_LINKS, PID_PLANNER, PID_PROGRAMS, PID_REQUESTS,
+                    Tracer)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "percentile",
+    "Tracer",
+    "PID_LINKS",
+    "PID_PROGRAMS",
+    "PID_REQUESTS",
+    "PID_PLANNER",
+    "get_logger",
+    "set_json",
+    "FeedbackLoop",
+    "FeedbackReport",
+]
+
+
+def __getattr__(name):
+    if name in ("FeedbackLoop", "FeedbackReport", "feedback"):
+        # importlib, not `from . import`: the latter re-enters this hook
+        # through importlib's hasattr check and recurses
+        import importlib
+
+        feedback = importlib.import_module(".feedback", __name__)
+        if name == "feedback":
+            return feedback
+        return getattr(feedback, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,177 @@
+"""Process-local metrics registry: counters, gauges, histograms.
+
+Before this module every layer kept its own ad-hoc tallies — plain ints on
+``PlanCache``, ``Engine._issued``-style privates, ``np.percentile`` calls
+inlined in the serving summary.  The registry is the single sink those
+layers now publish through: :class:`repro.core.Communicator` backs its
+plan-cache/tree-build/repair counters here, the async
+:class:`~repro.core.engine.Engine` its issue/complete/batch counters and
+wait-latency histogram, and :class:`repro.serving.scheduler.Scheduler` its
+request-lifecycle counters and TTFT/TPOT digests — while the frozen
+``CommStats`` / ``EngineStats`` / summary-dict surfaces those layers expose
+stay exactly as they were (they are *views* over the registry now).
+
+Design constraints, in priority order:
+
+1. **Cheap on the hot path.**  ``Counter.inc`` is one attribute add;
+   ``Histogram.observe`` one list append.  Digests (p50/p95/p99) are
+   computed at read time, never at write time.
+2. **Monotonic counters.**  ``inc`` rejects negative deltas, so a counter
+   can only move forward — what lets tests *assert* accounting identities
+   (hits + misses = lookups, tree_builds only grows) instead of spot
+   checking.  ``reset`` exists for explicit cache-clear semantics and is
+   the only way down.
+3. **No global state.**  Each registry is an object; layers create their
+   own by default and accept a shared one for cross-layer dashboards.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "percentile"]
+
+
+def percentile(xs: Iterable[float], q: float) -> float:
+    """The ONE percentile rule every digest in the repo uses (linear
+    interpolation, numpy semantics); empty input reads as NaN so summary
+    tables stay total without special-casing."""
+    xs = list(xs)
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=float), q))
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+
+    def inc(self, n: int | float = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease "
+                             f"(inc by {n})")
+        self._value += n
+
+    @property
+    def value(self):
+        return self._value
+
+    def reset(self) -> None:
+        """Explicit zeroing (cache clear / test isolation) — the only
+        non-monotonic move, and it is deliberate, never incidental."""
+        self._value = 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Counter({self.name}={self._value})"
+
+
+class Gauge:
+    """Last-write-wins instantaneous value (queue depth, clock, ...)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Gauge({self.name}={self.value})"
+
+
+class Histogram:
+    """Append-only sample store with read-time percentile digests.
+
+    Samples are kept exactly (these are bounded-cardinality simulation and
+    serving runs, not unbounded production streams); ``summary`` returns
+    the digest row the benchmarks and serving reports persist.
+    """
+
+    __slots__ = ("name", "samples")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples: list[float] = []
+
+    def observe(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def percentile(self, q: float) -> float:
+        return percentile(self.samples, q)
+
+    def summary(self) -> dict:
+        s = self.samples
+        return {
+            "count": len(s),
+            "mean": float(np.mean(s)) if s else float("nan"),
+            "p50": percentile(s, 50),
+            "p95": percentile(s, 95),
+            "p99": percentile(s, 99),
+            "max": max(s) if s else float("nan"),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Histogram({self.name}, n={len(self.samples)})"
+
+
+class MetricsRegistry:
+    """Get-or-create namespace of metrics.  Asking for an existing name
+    with a different kind is an error — two layers can share a registry
+    without silently aliasing each other's instruments."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name)
+            self._metrics[name] = m
+        elif type(m) is not cls:
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """Flat JSON-able view: counters/gauges as numbers, histograms as
+        digest dicts — what a dashboard or benchmark persists."""
+        out: dict = {}
+        for name in self.names():
+            m = self._metrics[name]
+            if isinstance(m, Counter):
+                out[name] = m.value
+            elif isinstance(m, Gauge):
+                out[name] = m.value
+            else:
+                out[name] = m.summary()  # type: ignore[union-attr]
+        return out
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"MetricsRegistry({len(self._metrics)} metrics)"

@@ -37,6 +37,8 @@ from typing import Protocol, Sequence
 
 import numpy as np
 
+from ..obs.metrics import MetricsRegistry, percentile
+from ..obs.trace import PID_REQUESTS
 from .kv_cache import BlockAllocator, blocks_needed
 from .loadgen import Request, ReqState
 
@@ -209,7 +211,10 @@ class ServeReport:
 
 
 def _pct(xs: list[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+    # one percentile rule repo-wide: the obs registry's (numpy linear
+    # interpolation, NaN on empty) — summarize() keys are schema-guarded,
+    # so the delegation must not change values, only their provenance
+    return percentile(xs, q)
 
 
 def summarize(requests: list[Request]) -> dict:
@@ -250,7 +255,8 @@ class Scheduler:
                  compute_model=None, engine=None,
                  replicas: Sequence[tuple[int, ...]] | None = None,
                  weight_bytes: float = 0.0, gather_bytes: float = 1.0,
-                 bcast_every: int = 0):
+                 bcast_every: int = 0,
+                 tracer=None, metrics: MetricsRegistry | None = None):
         if policy not in SchedPolicy:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {SchedPolicy}")
@@ -273,6 +279,15 @@ class Scheduler:
         self.weight_bytes = float(weight_bytes)
         self.gather_bytes = float(gather_bytes)
         self.bcast_every = bcast_every
+        # a traced engine traces its scheduler too (one trace per serve run)
+        self.tracer = tracer if tracer is not None \
+            else getattr(engine, "tracer", None)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_done = self.metrics.counter("serve.done")
+        self._m_shed = self.metrics.counter("serve.shed")
+        self._m_stalled = self.metrics.counter("serve.stalled_steps")
+        self._m_ttft = self.metrics.histogram("serve.ttft_s")
+        self._m_tpot = self.metrics.histogram("serve.tpot_s")
 
     # -- admission ------------------------------------------------------- #
     def _padded_len(self, req: Request) -> int:
@@ -303,6 +318,11 @@ class Scheduler:
                     and now > r.slo.ttft_deadline(r.arrival_s)):
                 r.state = ReqState.SHED
                 r.finish_s = now
+                self._m_shed.inc()
+                if self.tracer is not None:
+                    self.tracer.instant(PID_REQUESTS, f"req{r.rid}", "shed",
+                                        now, {"reason": "ttft deadline past",
+                                              "waited_s": now - r.arrival_s})
                 continue
             need = self._admit_blocks(r)
             S_p = self._padded_len(r)
@@ -358,6 +378,8 @@ class Scheduler:
         waiting: deque[Request] = deque()
         running: list[Request] = []
         now, step, max_conc, stalls = 0.0, 0, 0, 0
+        tr = self.tracer
+        admit_s: dict[int, float] = {}  # rid -> admission time (spans)
 
         while pending or waiting or running:
             while pending and pending[0].arrival_s <= now:
@@ -367,6 +389,12 @@ class Scheduler:
                 continue
 
             prefill_tokens, admitted = self._admit(waiting, running, now)
+            if tr is not None:
+                for r in admitted:
+                    admit_s[r.rid] = now
+                    if now > r.arrival_s:
+                        tr.span(PID_REQUESTS, f"req{r.rid}", "waiting",
+                                r.arrival_s, now)
             if not running and waiting:
                 # nothing runs and the head request can't ever be admitted
                 # (every block is free right now): fail loudly, don't spin
@@ -395,6 +423,8 @@ class Scheduler:
                         continue
                 deciding.append(r)
             stalls += len(stalled)
+            if stalled:
+                self._m_stalled.inc(len(stalled))
             if stalled and not deciding and not admitted:
                 # every live request is OOM-stalled: nobody will ever free a
                 # block.  Evict the youngest to break the deadlock (its
@@ -402,6 +432,11 @@ class Scheduler:
                 victim = max(stalled, key=lambda r: r.arrival_s)
                 victim.state = ReqState.SHED
                 victim.finish_s = now
+                self._m_shed.inc()
+                if tr is not None:
+                    tr.instant(PID_REQUESTS, f"req{victim.rid}", "evicted",
+                               now, {"reason": "OOM deadlock, youngest "
+                                               "victim recycled"})
                 self.alloc.free(victim.blocks)
                 victim.blocks = []
                 self.ex.release(victim.slot)
@@ -420,6 +455,11 @@ class Scheduler:
                 r.tokens.append(tok)
                 r.first_token_s = now
                 r.state = ReqState.DECODE
+                if tr is not None:
+                    tr.span(PID_REQUESTS, f"req{r.rid}", "prefill",
+                            admit_s[r.rid], now,
+                            {"prompt_len": r.prompt_len,
+                             "ttft_s": now - r.arrival_s})
             if deciding:
                 toks = self.ex.decode([r.slot for r in deciding],
                                       [r.tokens[-1] for r in deciding],
@@ -432,6 +472,16 @@ class Scheduler:
                 if len(r.tokens) >= r.max_new_tokens:
                     r.state = ReqState.DONE
                     r.finish_s = now
+                    self._m_done.inc()
+                    if r.ttft is not None:
+                        self._m_ttft.observe(r.ttft)
+                    if r.tpot is not None:
+                        self._m_tpot.observe(r.tpot)
+                    if tr is not None:
+                        tr.span(PID_REQUESTS, f"req{r.rid}", "decode",
+                                r.first_token_s, now,
+                                {"tokens": len(r.tokens),
+                                 "ttft_s": r.ttft, "tpot_s": r.tpot})
                     self.alloc.free(r.blocks)
                     r.blocks = []
                     self.ex.release(r.slot)

@@ -287,6 +287,64 @@ def test_stats_counts_hits_misses_evictions_repairs(fig8):
     assert (ci.hits, ci.misses) == (st.hits, st.misses)
 
 
+def test_stats_monotonic_and_tree_builds_exactly_accounted():
+    """Regression (observability): every CommStats counter is monotone
+    across the full elastic lifecycle, and ``tree_builds`` is EXACTLY
+    accounted — under a fixed policy it equals the miss count (one tree
+    per build), repair() splices without building, refresh() invalidates
+    without building (the rebuild is charged to the next miss), and a
+    capacity eviction charges one rebuild when the victim re-plans."""
+    import dataclasses
+
+    import repro.core.discovery as D
+
+    topo = paper_fig8_topology()   # private copy: refresh mutates levels
+    comm = Communicator(topo, policy="paper", backend="sim", cache_size=2)
+    prev = comm.stats()
+
+    def step(expect_builds):
+        nonlocal prev
+        st = comm.stats()
+        for f in ("hits", "misses", "evictions", "tree_builds", "repairs"):
+            assert getattr(st, f) >= getattr(prev, f), (f, prev, st)
+        # the exact identity: policy="paper" builds ONE tree per miss
+        assert st.tree_builds == st.misses == expect_builds, (prev, st)
+        prev = st
+        return st
+
+    comm.plan("bcast", root=0, nbytes=64e3)
+    comm.plan("bcast", root=1, nbytes=64e3)
+    step(2)
+    comm.plan("bcast", root=0, nbytes=64e3)           # hit
+    assert step(2).hits == 1
+
+    rep = comm.repair(failed=[40])                    # splice, not rebuild
+    assert rep.repaired == 2 and rep.evicted == 0
+    assert step(2).repairs == 1
+    comm.plan("bcast", root=0, nbytes=64e3)           # repaired plan: a hit
+    assert step(2).hits == 2
+
+    drifted = Topology(topo.coords, [dataclasses.replace(
+        topo.levels[0], latency=topo.levels[0].latency * 3)]
+        + list(topo.levels[1:]))
+    probes = D.targeted_probes(drifted,
+                               D.representative_pairs(topo, comm.members))
+    assert comm.refresh(probes).refreshed
+    step(2)                                           # invalidate ≠ build
+    comm.plan("bcast", root=0, nbytes=64e3)           # rebuild under new costs
+    assert step(3).misses == 3
+
+    comm.plan("bcast", root=1, nbytes=64e3)
+    comm.plan("bcast", root=2, nbytes=64e3)           # capacity 2: evicts
+    assert step(5).evictions == 1
+    comm.plan("bcast", root=0, nbytes=64e3)           # victim re-plans
+    st = step(6)
+    assert st.evictions == 2 and st.hits == 2
+    # the registry enforces monotonicity at the type level, not by promise
+    with pytest.raises(ValueError, match="cannot decrease"):
+        comm.metrics.counter("comm.tree_builds").inc(-1)
+
+
 def test_nbytes_of_pinned_sizing_semantics(fig8):
     """Satellite: gather/allgather/scatter plans are sized by the PER-RANK
     contribution.  Scalars already mean that; a device-shaped scatter
