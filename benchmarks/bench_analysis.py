@@ -1,0 +1,221 @@
+"""Static-analysis benchmark: verifier throughput and the sanitize-mode
+runtime budget.  Persists ``BENCH_analysis.json``.
+
+Three sections:
+
+``verifier``
+    Full verification (structure + members + DAG + conservation + symbolic
+    semantics) of every op's tree lowering on the 512-chip pod, plus the
+    sag/rsag large-message programs — wall time per program and sends/s
+    throughput.  The point is that machine-checking a production-scale
+    plan costs milliseconds, so re-proving the cache after every
+    ``repair()`` is a non-event.
+``sanitize``
+    ``simulate_rounds(..., sanitize=True)`` vs plain execution over a fig8
+    size sweep, median paired CPU-time ratio (same harness as bench_obs).
+    The quick_check memoises per ``Lowered`` object, so steady-state
+    (cached plans, the only regime that matters on a hot path) overhead is
+    one WeakSet lookup; the headline asserts the 64 MiB steady-state row
+    stays under the 5% budget.
+``lint``
+    ``lint_tree`` over ``src/repro``: file count, wall time, and finding
+    count — asserted ZERO, the same contract the CI gate enforces.
+
+``--smoke`` runs a reduced leg and checks the committed artifact's schema
+instead of overwriting it (see ``bench_schema.py``); CI runs this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+import time
+
+from repro.analysis.lint import lint_tree
+from repro.analysis.verify import verify_lowered
+from repro.core import Communicator
+from repro.core import rounds as R
+from repro.core.simulator import _SANITIZED, simulate_rounds
+from repro.core.topology import paper_fig8_topology, tpu_v5e_multipod
+from repro.core.trees import PAPER_POLICY, build_multilevel_tree
+
+KIB, MIB = 1024.0, float(1 << 20)
+ALL_OPS = ("bcast", "reduce", "barrier", "gather", "scatter", "allreduce",
+           "allgather")
+BUDGET_PCT = 5.0
+
+
+def _paired_overhead(fn_a, fn_b, reps: int) -> tuple[float, float, float]:
+    """Median of back-to-back CPU-time ratios (see bench_obs for why this
+    is robust on noisy shared machines)."""
+    ta, tb, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.process_time()
+        fn_a()
+        a = time.process_time() - t0
+        t0 = time.process_time()
+        fn_b()
+        b = time.process_time() - t0
+        ta.append(a)
+        tb.append(b)
+        ratios.append(b / a)
+    return (statistics.median(ta), statistics.median(tb),
+            statistics.median(ratios))
+
+
+def verifier_section(smoke: bool) -> list[dict]:
+    topo = tpu_v5e_multipod()
+    members = tuple(range(topo.nprocs))
+    tree = build_multilevel_tree(topo, 0, members, PAPER_POLICY)
+    nb = MIB if smoke else 16 * MIB
+    ops = ("bcast", "allreduce", "gather") if smoke else ALL_OPS
+    progs = [(f"{op}/tree", R.lower_tree(op, tree, topo, nb, "bdp"))
+             for op in ops]
+    progs.append(("bcast/sag", R.lower_sag_bcast(topo, 0, members, nb,
+                                                 "bdp")))
+    progs.append(("allreduce/rsag",
+                  R.lower_rsag_allreduce(topo, members, nb, "bdp")))
+    rows = []
+    for name, low in progs:
+        t0 = time.perf_counter()
+        findings = verify_lowered(low)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "program": name, "nprocs": topo.nprocs,
+            "size_mib": nb / MIB, "n_sends": len(low.sends),
+            "verify_ms": dt * 1e3,
+            "sends_per_s": len(low.sends) / dt if dt > 0 else 0.0,
+            "findings": len(findings),
+        })
+    return rows
+
+
+def sanitize_section(smoke: bool) -> list[dict]:
+    topo = paper_fig8_topology()
+    comm = Communicator(topo, policy="auto", backend="sim")
+    sizes = (MIB, 64 * MIB) if smoke else (64 * KIB, MIB, 8 * MIB,
+                                           64 * MIB)
+    reps = 11 if smoke else 15
+    rows = []
+    for nb in sizes:
+        low = comm.plan("allreduce", nbytes=nb).lower(nb)
+        # steady state: the program has passed the gate once already (the
+        # cached-plan regime every training/serving step runs in)
+        simulate_rounds(low, topo, sanitize=True)
+        plain, san, ratio = _paired_overhead(
+            lambda: simulate_rounds(low, topo),
+            lambda: simulate_rounds(low, topo, sanitize=True),
+            reps)
+        # cold: first sight of the program object (once per plan build)
+        t0 = time.process_time()
+        _SANITIZED.discard(low)
+        simulate_rounds(low, topo, sanitize=True)
+        cold = time.process_time() - t0
+        rows.append({
+            "size_mib": nb / MIB, "n_sends": len(low.sends),
+            "plain_ms": plain * 1e3, "sanitized_ms": san * 1e3,
+            "overhead_pct": (ratio - 1.0) * 100.0,
+            "cold_first_check_ms": cold * 1e3,
+        })
+    return rows
+
+
+def lint_section() -> dict:
+    root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src", "repro")
+    nfiles = sum(1 for dp, _, fns in os.walk(root)
+                 for fn in fns if fn.endswith(".py"))
+    t0 = time.perf_counter()
+    findings = lint_tree(root)
+    dt = time.perf_counter() - t0
+    return {"files": nfiles, "findings": len(findings),
+            "wall_ms": dt * 1e3}
+
+
+def build_doc(smoke: bool = False) -> dict:
+    ver = verifier_section(smoke)
+    san = sanitize_section(smoke)
+    lint = lint_section()
+
+    verify_clean = all(r["findings"] == 0 for r in ver)
+    worst_ms = max(r["verify_ms"] for r in ver)
+    big = [r for r in san if r["size_mib"] == 64.0]
+    worst_overhead = max(r["overhead_pct"] for r in big)
+    sanitize_ok = worst_overhead < BUDGET_PCT
+    lint_ok = lint["findings"] == 0
+    headline = {
+        "verifier_programs": len(ver),
+        "verifier_clean": verify_clean,
+        "verifier_worst_ms": worst_ms,
+        "sanitize_overhead_pct_64mib": worst_overhead,
+        "budget_pct": BUDGET_PCT,
+        "sanitize_passed": sanitize_ok,
+        "lint_findings": lint["findings"],
+        "lint_passed": lint_ok,
+        "passed": verify_clean and sanitize_ok and lint_ok,
+    }
+    summary = [
+        f"verifier (512-chip, {ver[0]['size_mib']:g} MiB): "
+        f"{len(ver)} programs, 0 findings, worst {worst_ms:.1f} ms",
+    ]
+    for r in ver:
+        summary.append(
+            f"  {r['program']}: {r['n_sends']} sends, "
+            f"{r['verify_ms']:.1f} ms ({r['sends_per_s']:,.0f} sends/s)")
+    summary.append(
+        f"sanitize steady-state overhead (fig8 allreduce): worst 64 MiB "
+        f"row {worst_overhead:+.2f}% (budget {BUDGET_PCT:g}%: "
+        f"{'PASS' if sanitize_ok else 'FAIL'})")
+    for r in san:
+        summary.append(
+            f"  {r['size_mib']:g} MiB: {r['plain_ms']:.3f} -> "
+            f"{r['sanitized_ms']:.3f} ms ({r['overhead_pct']:+.2f}%), "
+            f"cold first check {r['cold_first_check_ms']:.2f} ms")
+    summary.append(
+        f"lint: {lint['files']} files in {lint['wall_ms']:.0f} ms, "
+        f"{lint['findings']} findings "
+        f"({'PASS' if lint_ok else 'FAIL'})")
+    return {
+        "generated_by": "benchmarks/bench_analysis.py",
+        "verifier": ver,
+        "sanitize": san,
+        "lint": lint,
+        "headline": headline,
+        "summary": summary,
+    }
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_analysis.json")
+    doc = build_doc(smoke=smoke)
+    for line in doc["summary"]:
+        print("#", line)
+    if smoke:
+        from bench_schema import check_against_committed
+
+        drifts = check_against_committed(doc, path)
+        if drifts:
+            print("BENCH_analysis.json schema drift:", file=sys.stderr)
+            for d in drifts:
+                print(" ", d, file=sys.stderr)
+            return 1
+        if not doc["headline"]["passed"]:
+            print("analysis acceptance failed:", doc["headline"],
+                  file=sys.stderr)
+            return 1
+        print("# smoke: schema matches committed BENCH_analysis.json")
+        return 0
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print("# wrote BENCH_analysis.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    raise SystemExit(main())

@@ -21,6 +21,7 @@ import sys
 # A new benchmark registers here (and a `--smoke` leg in the bench-smoke CI
 # job) so its persisted schema is guarded from day one.
 ARTIFACTS = {
+    "BENCH_analysis.json": "benchmarks/bench_analysis.py",
     "BENCH_collectives.json": "benchmarks/bench_collectives.py",
     "BENCH_discovery.json": "benchmarks/bench_discovery.py",
     "BENCH_elastic.json": "benchmarks/bench_elastic.py",

@@ -945,6 +945,29 @@ class Communicator:
         self._cache.clear()
         self._tree_builds.reset()
 
+    def verify_plans(self) -> int:
+        """Statically verify every cached plan (:mod:`repro.analysis.verify`:
+        semantics, byte conservation, dependency DAG, member closure) at
+        every payload size it has lowered — or at its largest observed
+        traffic when it never lowered.  Returns the number of lowered
+        programs checked; raises
+        :class:`~repro.analysis.verify.VerificationError` on a plan that
+        fails.  :meth:`repair` and :meth:`refresh` run this automatically,
+        so a spliced or refitted cache is re-proven before serving traffic.
+        """
+        from ..analysis.verify import check_lowered  # no load-time cycle
+
+        checked = 0
+        for key, plan in self._cache.items():
+            op, root, _bucket, _mem, _pol = key
+            sizes = sorted(plan._lowered) or [max(plan.max_nbytes, 65536.0)]
+            for nb in sizes:
+                check_lowered(plan.lower(nb),
+                              context=f"cached plan {op}/{plan.algorithm} "
+                                      f"root={root} nbytes={nb:g}")
+                checked += 1
+        return checked
+
     # -- elasticity: survive failures without a full re-plan ------------- #
     def has_quorum(self, failed: Sequence[int], quorum: float = 0.5) -> bool:
         """True when removing ``failed`` leaves strictly more than
@@ -958,7 +981,8 @@ class Communicator:
         dead = set(failed) & set(self.members)
         return has_quorum(len(self.members), len(dead), quorum)
 
-    def repair(self, failed: Sequence[int]) -> RepairReport:
+    def repair(self, failed: Sequence[int], *,
+               verify: bool = True) -> RepairReport:
         """Remove failed ranks and repair the plan cache IN PLACE.
 
         Every cached plan whose member set intersects ``failed`` is either
@@ -969,7 +993,9 @@ class Communicator:
         root died, or it runs a leaf-group algorithm such as sag/rsag whose
         lowering is shaped by membership) and re-plans lazily on next use.
         Entries whose member sets do not intersect the failed ranks are
-        untouched.
+        untouched.  Unless ``verify=False``, the surviving cache is then
+        re-proven by :meth:`verify_plans` — an in-place splice never gets
+        to serve traffic unverified.
         """
         dead = set(failed) & set(self.members)
         survivors = tuple(m for m in self.members if m not in dead)
@@ -1008,10 +1034,13 @@ class Communicator:
         self.members = survivors
         if dead:
             self._repairs.inc()
+            if verify:
+                self.verify_plans()
         return RepairReport(tuple(sorted(dead)), survivors,
                             repaired, evicted, kept)
 
-    def refresh(self, probes, *, threshold: float = 0.1) -> RefreshReport:
+    def refresh(self, probes, *, threshold: float = 0.1,
+                verify: bool = True) -> RefreshReport:
         """Fold a targeted drift re-probe into the communicator.
 
         ``probes`` is a :class:`repro.core.discovery.TargetedProbes` taken
@@ -1051,6 +1080,11 @@ class Communicator:
             return RefreshReport(False, drift, worst)
         self.topo = D.refit_levels(self.topo, probes)
         self._cache.invalidate()  # stale costs; stats/counters stay
+        if verify:
+            # the cache was just invalidated, so this proves "no stale
+            # plan survived the refit" rather than re-checking lowerings;
+            # plans built later verify on the next repair()/verify_plans()
+            self.verify_plans()
         return RefreshReport(True, drift, worst)
 
     # -- the seven collectives -------------------------------------------- #

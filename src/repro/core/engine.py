@@ -99,7 +99,9 @@ class Handle:
         scheduled as a whole; see :meth:`Engine.wait_all`)."""
         if self.result is None:
             self.engine._flush()
-        assert self.result is not None
+        if self.result is None:  # pragma: no cover - flush resolves batch
+            raise RuntimeError(
+                f"handle #{self.hid} still unresolved after flush")
         return self.result
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -128,6 +130,11 @@ class Engine:
     execution on the simulation plane (any backend's communicator works —
     planning is backend-independent).  ``policy`` is one of
     :data:`POLICIES` and may be overridden per :meth:`wait_all` call.
+    ``check=True`` runs the static hazard analyzer
+    (:mod:`repro.analysis.hazards`) at every :meth:`issue` (error-severity
+    hazards only) and :meth:`wait_all` (the full analysis, warnings
+    included) — a deadlock cycle or dangling dependency fails fast with a
+    precise diagnosis instead of surfacing as a cryptic simulation error.
 
     Member subsets: ``issue(..., members=...)`` plans over a sub-group of
     the communicator's ranks.  Sub-group plans are cached in per-subset
@@ -136,7 +143,7 @@ class Engine:
     """
 
     def __init__(self, comm: Communicator, *, policy: str = "fifo",
-                 now: float = 0.0, age_rate: float = 0.0,
+                 now: float = 0.0, age_rate: float = 0.0, check: bool = False,
                  tracer=None, metrics: MetricsRegistry | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
@@ -145,6 +152,7 @@ class Engine:
             raise ValueError("age_rate must be >= 0")
         self.comm = comm
         self.policy = policy
+        self.check = bool(check)
         self.age_rate = float(age_rate)
         self.now = float(now)
         # a traced communicator traces its engine too — one tracer covers
@@ -204,6 +212,14 @@ class Engine:
                    self.now if at is None else float(at), tuple(after),
                    priority)
         self._pending.append(h)
+        if self.check:
+            from ..analysis.hazards import HazardError, check_hazards
+
+            try:
+                check_hazards(self, errors_only=True)
+            except HazardError:
+                self._pending.remove(h)  # don't poison the batch
+                raise
         self._issued.inc()
         return h
 
@@ -213,10 +229,23 @@ class Engine:
         return handle.wait()
 
     def wait_all(self, handles: Sequence[Handle] | None = None,
-                 policy: str | None = None) -> list[SimResult]:
+                 policy: str | None = None,
+                 check: bool | None = None) -> list[SimResult]:
         """Resolve every pending handle (the whole batch is scheduled
         together) and return the results of ``handles`` (default: the
-        batch just flushed, in issue order)."""
+        batch just flushed, in issue order).  Handles issued on a different
+        engine are rejected — accepting one would silently flush BOTH
+        engines and return results that were never part of this batch.
+        ``check`` overrides the engine's ``check=`` flag for this flush."""
+        if handles is not None:
+            for h in handles:
+                if h.engine is not self:
+                    raise ValueError("handle was issued on a different "
+                                     "engine")
+        if self.check if check is None else check:
+            from ..analysis.hazards import check_hazards
+
+            check_hazards(self)
         batch = self._flush(policy=policy)
         out = batch if handles is None else list(handles)
         return [h.wait() for h in out]

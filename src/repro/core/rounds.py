@@ -660,3 +660,31 @@ def check_semantics(lowered: Lowered) -> None:
                 expect(r, m, frozenset([m]), "every rank gets every chunk")
     else:  # pragma: no cover - future ops must add a contract
         raise ValueError(f"no semantic contract for op {op!r}")
+
+    if op in ("gather", "scatter"):
+        # Routing minimality for the single-consumer personalised ops: the
+        # final-state contract above inspects only the terminal cells, so a
+        # *leaked* extra copy of chunk x to a bystander rank would pass it
+        # (delivered-once is per receiver, not per chunk).  Statically,
+        # chunk x's copy sends must form a simple relay path: every rank
+        # that receives x and is not its terminal consumer (gather: the
+        # root; scatter: rank x itself) forwards it exactly once, and the
+        # terminal never forwards it.
+        fwd: dict[tuple[int, int], int] = {}
+        recv: dict[int, set[int]] = {}
+        for snd in lowered.sends:
+            if snd.kind != "copy":
+                continue
+            fwd[(snd.src, snd.chunk)] = fwd.get((snd.src, snd.chunk), 0) + 1
+            recv.setdefault(snd.chunk, set()).add(snd.dst)
+        for x, dsts in sorted(recv.items()):
+            terminal = root if op == "gather" else x
+            for r in sorted(dsts):
+                want = 0 if r == terminal else 1
+                got = fwd.get((r, x), 0)
+                if got != want:
+                    raise ValueError(
+                        f"{lowered.op}/{lowered.algorithm}: chunk routing: "
+                        f"rank {r} received chunk {x} and forwarded it "
+                        f"{got}x, want {want} "
+                        f"({'terminal consumer' if want == 0 else 'relay'})")

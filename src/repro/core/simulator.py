@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import heapq
 import math
+import weakref
 from typing import Mapping, Sequence
 
 from ..obs.trace import PID_PROGRAMS
@@ -49,6 +50,45 @@ from .topology import Topology
 # bottleneck chain in a viewer, bounded so a 64-segment pipelined transfer
 # cannot bloat the trace.
 _CRIT_PATH_CAP = 64
+
+class _IdWeakSet:
+    """Identity-keyed weak set.  ``Lowered`` is a frozen dataclass whose
+    field-derived hash walks the whole send list — O(n_sends) per lookup —
+    so a plain WeakSet memo would cost ~10% of the simulation itself.
+    Keying on ``id()`` with a death callback keeps the lookup O(1) without
+    keeping evicted plans alive (the callback runs before the interpreter
+    can reuse the address)."""
+
+    def __init__(self) -> None:
+        self._refs: dict[int, "weakref.ref"] = {}
+
+    def __contains__(self, obj) -> bool:
+        ref = self._refs.get(id(obj))
+        return ref is not None and ref() is obj
+
+    def add(self, obj) -> None:
+        key = id(obj)
+        self._refs[key] = weakref.ref(
+            obj, lambda _r, k=key: self._refs.pop(k, None))
+
+    def discard(self, obj) -> None:
+        if obj in self:
+            del self._refs[id(obj)]
+
+
+# Programs that already passed the sanitize gate this process: Lowered is
+# frozen (its send list cannot change), so each object needs checking once
+# — the memo makes ``sanitize=True`` free on cached-plan re-runs.
+_SANITIZED = _IdWeakSet()
+
+
+def _sanitize(lowered) -> None:
+    if lowered in _SANITIZED:
+        return
+    from ..analysis.verify import quick_check  # no load-time cycle
+
+    quick_check(lowered, context="sanitize")
+    _SANITIZED.add(lowered)
 
 __all__ = ["simulate", "simulate_rounds", "simulate_concurrent",
            "simulate_op", "probe_time"]
@@ -132,7 +172,7 @@ def _run_up(phase, topo: Topology, prev: dict[int, float]) -> dict[int, float]:
 def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
                     fail_at: dict[int, float] | None = None,
                     *, tracer=None, label: str | None = None,
-                    ) -> dict[int, float]:
+                    sanitize: bool = False) -> dict[int, float]:
     """Execute a :class:`~repro.core.rounds.Lowered` program on ``topo``.
 
     One linear pass: the send list is topologically ordered and each rank's
@@ -160,6 +200,12 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
     delivery) is emitted as an instant on track ``label``.  Tracing never
     perturbs the computed times — the timing code is byte-for-byte the
     untraced path.
+
+    ``sanitize=True`` runs the cheap structural verifier
+    (:func:`repro.analysis.verify.quick_check`: self-sends, member
+    closure, dependency order/cycles) before executing; each ``Lowered``
+    object is checked at most once per process, so re-running a cached
+    plan costs one set lookup.
     """
     if isinstance(lowered, (list, tuple)):
         if fail_at:
@@ -167,7 +213,10 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
                              "programs; inject failures per single program")
         return simulate_concurrent(
             lowered, topo, starts=[start] * len(lowered), tracer=tracer,
-            labels=[label] * len(lowered) if label is not None else None)
+            labels=[label] * len(lowered) if label is not None else None,
+            sanitize=sanitize)
+    if sanitize:
+        _sanitize(lowered)
     if tracer is not None and tracer.defer:
         # zero-cost tracing on the live run: queue a deterministic replay
         # (this exact call, inline-recording) for when the trace is read,
@@ -287,6 +336,7 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
                         tracer=None,
                         labels: Sequence[str | None] | None = None,
                         trace_programs: bool = True,
+                        sanitize: bool = False,
                         ) -> list[dict[int, float]]:
     """Execute several ``Lowered`` programs concurrently on ``topo``.
 
@@ -350,6 +400,9 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
                 labels=lb, trace_programs=trace_programs))
         tracer = None
     progs = list(programs)
+    if sanitize:
+        for p in progs:
+            _sanitize(p)
     K = len(progs)
     rel = list(starts) if starts is not None else [0.0] * K
     if len(rel) != K:

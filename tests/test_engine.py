@@ -77,6 +77,13 @@ def test_issue_validation(fig8):
         eng.wait(h)
     with pytest.raises(ValueError, match="different engine"):
         eng.issue("bcast", 1e3, after=[h])
+    # wait_all must reject foreign handles too: accepting one silently
+    # flushed BOTH engines and returned results that were never part of
+    # this engine's batch
+    with pytest.raises(ValueError, match="different engine"):
+        eng.wait_all(handles=[h])
+    assert not h.done  # the guard fired before anything flushed
+    other.wait_all()
 
 
 # ------------------------------------------------------------------ #
