@@ -27,9 +27,44 @@ ARTIFACTS = {
     "BENCH_elastic.json": "benchmarks/bench_elastic.py",
     "BENCH_engine.json": "benchmarks/bench_engine.py",
     "BENCH_kernels.json": "benchmarks/bench_kernels.py",
+    "BENCH_monitor.json": "benchmarks/bench_monitor.py",
     "BENCH_obs.json": "benchmarks/bench_obs.py",
     "BENCH_serve.json": "benchmarks/bench_serve.py",
 }
+
+# Perf-trajectory gates over the committed artifacts' ``headline`` blocks:
+# metric -> ("low"|"high", slack).  "low" means lower is better (regression
+# = grew past slack); "high" the reverse.  The slack is relative AND serves
+# as an absolute floor, so a zero-valued baseline (post-refit regret 0.0)
+# keeps exactly `slack` of absolute headroom instead of none.  Every
+# *boolean* headline key is gated implicitly — True may never flip to
+# False.  Wall-clock metrics get generous slack (they move with the CI
+# machine); model-quality metrics (regret, rel-err) get tight slack because
+# the benchmarks computing them are deterministic.
+HISTORY_GATES = {
+    "BENCH_analysis.json": {
+        "verifier_worst_ms": ("low", 1.00),
+        "sanitize_overhead_pct_64mib": ("low", 1.00),
+        "lint_findings": ("low", 0.0),
+    },
+    "BENCH_engine.json": {
+        "speedup": ("high", 0.05),
+    },
+    "BENCH_monitor.json": {
+        "post_refit_regret": ("low", 0.02),
+        "deconvolved_vs_lone_rel_err": ("low", 0.02),
+        "detection_latency_steps": ("low", 0.50),
+        "monitored_tail_over_pre": ("low", 0.10),
+    },
+    "BENCH_obs.json": {
+        "overhead_pct_64mib_worst": ("low", 1.00),
+        "post_refit_regret": ("low", 0.02),
+    },
+    "BENCH_serve.json": {
+        "paged_max_concurrent": ("high", 0.0),
+    },
+}
+HISTORY_FILE = "BENCH_history.json"
 
 
 def schema_of(x):
@@ -82,16 +117,106 @@ def _diff(a, b, where: str, out: list[str]) -> None:
         out.append(f"{where}: {a!r} -> {b!r}")
 
 
+def collect_headlines(root: str) -> dict:
+    """The ``headline`` block of every committed artifact that has one.
+    Artifacts without a headline (raw sweeps) have no single scalar worth
+    tracking across PRs and are covered by the schema guard alone."""
+    out = {}
+    for artifact in sorted(ARTIFACTS):
+        path = os.path.join(root, artifact)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc.get("headline"), dict):
+            out[artifact] = doc["headline"]
+    return out
+
+
+def compare_history(history: dict, current: dict) -> list[str]:
+    """Regressions of ``current`` headlines against the ``history``
+    snapshot, per :data:`HISTORY_GATES`.  Pure function of its inputs
+    (unit-testable).  Metrics/artifacts absent from history are new —
+    reported by ``--history`` as informational, never as regressions."""
+    bad: list[str] = []
+    for artifact, head in sorted(current.items()):
+        prev = history.get(artifact)
+        if prev is None:
+            continue
+        gates = HISTORY_GATES.get(artifact, {})
+        for key, now in sorted(head.items()):
+            was = prev.get(key)
+            if isinstance(was, bool) and isinstance(now, bool):
+                if was and not now:
+                    bad.append(f"{artifact}:{key}: True -> False")
+                continue
+            gate = gates.get(key)
+            if gate is None or not isinstance(was, (int, float)) \
+                    or not isinstance(now, (int, float)):
+                continue
+            direction, slack = gate
+            allowed = slack * abs(was) + slack
+            if direction == "low" and now > was + allowed:
+                bad.append(f"{artifact}:{key}: {was:g} -> {now:g} "
+                           f"(allowed <= {was + allowed:g})")
+            elif direction == "high" and now < was - allowed:
+                bad.append(f"{artifact}:{key}: {was:g} -> {now:g} "
+                           f"(allowed >= {was - allowed:g})")
+    return bad
+
+
+def run_history(root: str, update: bool) -> int:
+    """``--history``: gate committed headlines against the committed
+    ``BENCH_history.json`` snapshot; ``--update`` reseeds the snapshot from
+    the current artifacts (commit it alongside a deliberate perf change)."""
+    path = os.path.join(root, HISTORY_FILE)
+    current = collect_headlines(root)
+    if update:
+        with open(path, "w") as f:
+            json.dump({"generated_by": "benchmarks/bench_schema.py "
+                                        "--history --update",
+                       "headlines": current}, f, indent=1)
+            f.write("\n")
+        print(f"# {HISTORY_FILE}: snapshot of {len(current)} headline(s)")
+        return 0
+    if not os.path.exists(path):
+        print(f"missing {HISTORY_FILE}; seed it with "
+              "`bench_schema.py --history --update`", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        history = json.load(f)["headlines"]
+    for artifact in sorted(set(current) - set(history)):
+        print(f"# {artifact}: new artifact, not in history yet")
+    regressions = compare_history(history, current)
+    if regressions:
+        print("benchmark headline regressions vs committed history:",
+              file=sys.stderr)
+        for r in regressions:
+            print(" ", r, file=sys.stderr)
+        print("(intentional? re-run with --history --update and commit "
+              "the new BENCH_history.json)", file=sys.stderr)
+        return 1
+    n = sum(len(HISTORY_GATES.get(a, {})) for a in current)
+    print(f"# history: {n} gated metric(s) across {len(current)} "
+          "headline(s), no regressions")
+    return 0
+
+
 def main(argv=None) -> int:
     """``--all``: run every registered benchmark's ``--smoke`` leg (each one
     schema-checks its own committed artifact and asserts its acceptance
-    criteria).  Flags specific to one benchmark (e.g. bench_obs's
-    ``--trace-out``) belong in that benchmark's own invocation."""
+    criteria).  ``--history``: compare committed headline metrics against
+    the ``BENCH_history.json`` snapshot (``--update`` reseeds it).  Flags
+    specific to one benchmark (e.g. bench_obs's ``--trace-out``) belong in
+    that benchmark's own invocation."""
     argv = list(sys.argv[1:] if argv is None else argv)
-    if "--all" not in argv:
-        print("usage: bench_schema.py --all", file=sys.stderr)
-        return 2
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if "--history" in argv:
+        return run_history(root, update="--update" in argv)
+    if "--all" not in argv:
+        print("usage: bench_schema.py --all | --history [--update]",
+              file=sys.stderr)
+        return 2
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(root, "src"),

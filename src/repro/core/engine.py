@@ -144,13 +144,24 @@ class Engine:
 
     def __init__(self, comm: Communicator, *, policy: str = "fifo",
                  now: float = 0.0, age_rate: float = 0.0, check: bool = False,
-                 tracer=None, metrics: MetricsRegistry | None = None):
+                 tracer=None, metrics: MetricsRegistry | None = None,
+                 truth=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
         if age_rate < 0:
             raise ValueError("age_rate must be >= 0")
+        if truth is not None and truth.nprocs != comm.topo.nprocs:
+            raise ValueError("truth topology has a different rank count")
         self.comm = comm
+        # ``truth`` splits planning from execution: plans (and the
+        # predicted_s the spans carry) come from comm.topo, but the batch
+        # is *priced* on this topology — the simulation stand-in for the
+        # real network, same role as FeedbackLoop.run(truth=).  Swapping
+        # it mid-run injects link drift the model has not seen yet.
+        self.truth = truth
+        # set via HealthMonitor(engine=...): receives every resolved batch
+        self.monitor = None
         self.policy = policy
         self.check = bool(check)
         self.age_rate = float(age_rate)
@@ -307,7 +318,8 @@ class Engine:
                  for h in batch]
         if self.age_rate:
             prios = [(p, self.age_rate) for p in prios]
-        topo = self.comm.topo
+        topo = self.comm.topo  # the model: plans + predicted_s
+        net = topo if self.truth is None else self.truth  # what executes
         tr = self.tracer
         labels = [f"{h.op}#{h.hid}" for h in batch] if tr is not None \
             else None
@@ -315,7 +327,7 @@ class Engine:
         def run(deps, priorities, tracer=None):
             # trace_programs=False: the engine emits its own, richer,
             # handle spans on the same tracks below
-            return simulate_concurrent(programs, topo, starts=releases,
+            return simulate_concurrent(programs, net, starts=releases,
                                        deps=deps, priorities=priorities,
                                        tracer=tracer, labels=labels,
                                        trace_programs=False)
@@ -388,7 +400,23 @@ class Engine:
             tr.instant(PID_PROGRAMS, "engine", f"flush {self._last_policy}",
                        self.now, {"policy": self._last_policy,
                                   "batch": len(batch)})
+        if self.monitor is not None:
+            self.monitor.observe_handles(batch)
         return batch
+
+    def refresh_plans(self) -> None:
+        """Propagate a topology refit to every cached plan surface.
+
+        ``FeedbackLoop.maybe_refit`` / ``Communicator.refresh`` replace
+        ``comm.topo`` and invalidate the *main* communicator's plan cache,
+        but the engine's per-subset communicators still point at the old
+        topology object.  This re-points them and invalidates their
+        caches, so the next flush re-runs every argmin under the refit
+        costs — the health monitor calls it after each mid-run refit."""
+        self.comm._cache.invalidate()
+        for sub in self._subcomms.values():
+            sub.topo = self.comm.topo
+            sub._cache.invalidate()
 
     # -- elasticity ------------------------------------------------------ #
     def repair(self, failed: Sequence[int]):

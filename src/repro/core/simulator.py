@@ -239,6 +239,7 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
         # overhead budget asserted by benchmarks/bench_obs.py lives here
         lvltab = topo.comm_level_table()
         lappend = tracer.links.append
+        gid = tracer.group()  # one sharing group per invocation
         plabel = label if label is not None else "collective"
         cause: list[int | None] = []    # gate that set each send's t0
         last_send_of: dict[int, int] = {}
@@ -293,7 +294,8 @@ def simulate_rounds(lowered, topo: Topology, start: float = 0.0,
         delivered.append(done)
         if trace:
             lappend((src, dst, lvltab[src][dst], t0, arrival,
-                     snd.nbytes, snd.kind, snd.first, plabel))
+                     snd.nbytes, snd.kind, snd.first, plabel,
+                     t0 + xfer, gid))
             if snd.kind == "reduce":
                 if done - lvl.overhead > arrival:
                     # queued behind the receiver's fold drain: the delivery
@@ -492,6 +494,7 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
     trace = tracer is not None
     if trace:
         lvltab = topo.comm_level_table()
+        gid = tracer.group()  # every transfer of this batch shared links
         lab = [labels[j] if labels is not None and labels[j] is not None
                else f"prog{j}" for j in range(K)]
         astart = [0.0] * n             # first activation (flow start)
@@ -687,7 +690,7 @@ def simulate_concurrent(programs: Sequence, topo: Topology, *,
         if trace:
             tracer.link(snd.src, snd.dst, lvltab[snd.src][snd.dst],
                         astart[g], arrival, snd.nbytes, snd.kind, snd.first,
-                        lab[j])
+                        lab[j], t, gid)
         if snd.kind == "reduce":
             arrived[g] = arrival
             drain_folds(j, snd.dst)

@@ -68,13 +68,18 @@ def _engine_demo(wcomm, wbytes: float, cfg, prompt_len: int, model: int,
 def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
           mesh_spec: str = "1x2x2", smoke: bool = True, *,
           policy: str = "priority", block_size: int = 8,
-          rate: float | None = None, trace: str | None = None) -> dict:
+          rate: float | None = None, trace: str | None = None,
+          monitor: bool = False, metrics_out: str | None = None) -> dict:
     """Run ``n_requests`` through the continuous-batching scheduler on a
     host-device demo mesh (paged KV cache, real greedy decoding).
 
     ``rate``: open-loop Poisson arrival rate (req/s of *simulation* time);
     default: all requests arrive at t=0 (closed batch).  ``trace`` writes
-    a Chrome trace (request lifecycles, engine spans, link occupancy)."""
+    a Chrome trace (request lifecycles, engine spans, link occupancy).
+    ``monitor`` attaches a :class:`~repro.obs.HealthMonitor` to the engine
+    (drift detection + auto-refit, periodic health snapshots in the log);
+    ``metrics_out`` writes the run's Prometheus text exposition — a
+    scrape-file path that needs no tracer at all."""
     cfg = get_config(arch, smoke=smoke)
     pods, data, model = (int(x) for x in mesh_spec.split("x"))
     mesh = make_test_mesh(pods, data, model)
@@ -114,8 +119,17 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
     ex = JaxExecutor(cfg, mesh, n_blocks=n_blocks, block_size=block_size,
                      max_slots=max_slots, max_blocks=s_max // block_size)
     act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    # one registry spans engine + scheduler + monitor when scraping: the
+    # exposition file must read as ONE process, not three
+    from repro.obs import MetricsRegistry
+    registry = MetricsRegistry() if metrics_out or monitor else None
     eng = Engine(wcomm, policy="fifo" if policy == "fifo" else "priority",
-                 age_rate=wbytes)
+                 age_rate=wbytes, metrics=registry)
+    mon = None
+    if monitor:
+        from repro.obs import HealthMonitor
+        mon = HealthMonitor(engine=eng, metrics=registry,
+                            log_every=4)
     sch = Scheduler(
         ex, n_blocks=n_blocks, block_size=block_size, max_slots=max_slots,
         s_max=s_max, policy=policy, prefill_token_budget=4 * prompt_len,
@@ -124,7 +138,7 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
         engine=eng, replicas=replicas,
         weight_bytes=wbytes,
         gather_bytes=float(cfg.d_model * act_itemsize) / model,
-        bcast_every=16)
+        bcast_every=16, metrics=registry)
 
     if rate is None:
         arrivals = [0.0] * n_requests
@@ -153,13 +167,30 @@ def serve(arch: str, n_requests: int, prompt_len: int, gen_len: int,
              ttft_p99_ms=s["ttft_p99_s"] * 1e3,
              tpot_p50_ms=s["tpot_p50_s"] * 1e3,
              max_concurrent=report.max_concurrent)
+    if mon is not None:
+        snap = mon.snapshot()
+        log.info(f"health: {snap['refits']} refit(s), "
+                 f"{len(snap['stragglers'])} straggler(s), worst drift "
+                 f"{snap['worst_drift']:.3f} over {snap['checks']} checks",
+                 event="health", **{k: snap[k] for k in
+                                    ("refits", "worst_drift", "checks",
+                                     "stragglers", "links")})
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(registry.to_prometheus())
+        log.info(f"metrics: {len(registry.names())} series -> {metrics_out}",
+                 event="metrics", path=metrics_out,
+                 series=len(registry.names()))
     if tracer is not None:
         tracer.save(trace)
         log.info(f"trace: {tracer.n_events()} events -> {trace}",
                  event="trace", path=trace, events=tracer.n_events())
-    return {"generated": gen, "seconds": dt,
-            "tokens_per_s": n_requests * gen_len / dt,
-            "report": s}
+    out = {"generated": gen, "seconds": dt,
+           "tokens_per_s": n_requests * gen_len / dt,
+           "report": s}
+    if mon is not None:
+        out["health"] = mon.snapshot()
+    return out
 
 
 def main() -> None:
@@ -179,11 +210,19 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome trace of the serving run "
                          "(open in chrome://tracing or Perfetto)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach a HealthMonitor to the engine: drift "
+                         "detection, straggler scoring, auto-refit, "
+                         "periodic health snapshots in the log")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's metrics as Prometheus text "
+                         "exposition (no tracer needed)")
     args = ap.parse_args()
     set_json(args.log_json)
     out = serve(args.arch, args.requests, args.prompt_len, args.gen_len,
                 args.mesh, policy=args.policy, rate=args.rate,
-                trace=args.trace)
+                trace=args.trace, monitor=args.monitor,
+                metrics_out=args.metrics_out)
     log.info(f"generated {out['generated'].shape} tokens in "
              f"{out['seconds']:.2f}s ({out['tokens_per_s']:.1f} tok/s)",
              event="done", shape=list(out["generated"].shape),

@@ -4,10 +4,12 @@
 ``Communicator.stats()``), and :mod:`repro.obs.feedback` imports
 ``repro.core`` (it drives ``discovery.refit_levels``).  To keep that pair
 acyclic this package eagerly exposes only the leaf modules — ``feedback``
-is loaded on first attribute access.
+and ``monitor`` (which also imports ``repro.core``) are loaded on first
+attribute access.
 """
 from __future__ import annotations
 
+from .contention import deconvolve, occupancy
 from .log import get_logger, set_json
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, percentile
 from .trace import (PID_LINKS, PID_PLANNER, PID_PROGRAMS, PID_REQUESTS,
@@ -26,19 +28,29 @@ __all__ = [
     "PID_PLANNER",
     "get_logger",
     "set_json",
+    "deconvolve",
+    "occupancy",
     "FeedbackLoop",
     "FeedbackReport",
+    "HealthMonitor",
+    "HealthEvent",
 ]
+
+_LAZY = {"FeedbackLoop": "feedback", "FeedbackReport": "feedback",
+         "feedback": "feedback",
+         "HealthMonitor": "monitor", "HealthEvent": "monitor",
+         "monitor": "monitor"}
 
 
 def __getattr__(name):
-    if name in ("FeedbackLoop", "FeedbackReport", "feedback"):
+    modname = _LAZY.get(name)
+    if modname is not None:
         # importlib, not `from . import`: the latter re-enters this hook
         # through importlib's hasattr check and recurses
         import importlib
 
-        feedback = importlib.import_module(".feedback", __name__)
-        if name == "feedback":
-            return feedback
-        return getattr(feedback, name)
+        mod = importlib.import_module(f".{modname}", __name__)
+        if name == modname:
+            return mod
+        return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

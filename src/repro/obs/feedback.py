@@ -35,6 +35,7 @@ import dataclasses
 from ..core import discovery as D
 from ..core.costmodel import link_affine_fit
 from ..core.simulator import simulate_rounds
+from . import contention
 from .trace import Tracer
 
 __all__ = ["FeedbackLoop", "FeedbackReport"]
@@ -88,11 +89,22 @@ class FeedbackLoop:
         self._samples.setdefault(level, []).append(
             (float(nbytes), float(seconds), bool(first)))
 
-    def observe_trace(self, tracer: Tracer) -> int:
+    def observe_trace(self, tracer: Tracer, *,
+                      deconvolve: bool = True) -> int:
         """Ingest every link interval a tracer recorded; returns the
-        number of samples taken."""
+        number of samples taken.
+
+        ``deconvolve`` (default) scales each interval back to its
+        isolated-equivalent duration via
+        :func:`repro.obs.contention.deconvolve`, so traces from the
+        concurrent engine yield unbiased residuals.  It is a no-op on
+        uncontended traces (lone collectives price identically either
+        way); pass ``False`` only to study the contention bias itself.
+        """
+        rows = (contention.deconvolve(tracer) if deconvolve
+                else tracer.link_samples())
         n = 0
-        for _src, _dst, level, dt, nbytes, first in tracer.link_samples():
+        for _src, _dst, level, dt, nbytes, first in rows:
             self.observe(level, nbytes, dt, first)
             n += 1
         return n

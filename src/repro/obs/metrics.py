@@ -26,6 +26,8 @@ Design constraints, in priority order:
 """
 from __future__ import annotations
 
+import math
+from collections import deque
 from typing import Iterable
 
 import numpy as np
@@ -41,6 +43,17 @@ def percentile(xs: Iterable[float], q: float) -> float:
     if not xs:
         return float("nan")
     return float(np.percentile(np.asarray(xs, dtype=float), q))
+
+
+def _prom_num(v: float) -> str:
+    """Prometheus number rendering: integers stay integral, NaN is the
+    literal ``NaN`` the exposition format defines (empty histograms)."""
+    v = float(v)
+    if math.isnan(v):
+        return "NaN"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
 
 
 class Counter:
@@ -88,18 +101,31 @@ class Gauge:
 
 
 class Histogram:
-    """Append-only sample store with read-time percentile digests.
+    """Windowed sample store with read-time percentile digests.
 
-    Samples are kept exactly (these are bounded-cardinality simulation and
-    serving runs, not unbounded production streams); ``summary`` returns
-    the digest row the benchmarks and serving reports persist.
+    ``window`` bounds memory for long serving runs: samples live in a
+    ``deque(maxlen=window)``, so once ``count`` exceeds the window the
+    oldest samples roll off and the digests become *rolling-window*
+    percentiles (what a live monitor wants anyway).  Below the bound the
+    behavior is exactly the old unbounded list's — same samples, same
+    digests.  ``window=None`` keeps every sample (the pre-bound
+    behavior), for short analytical runs that digest the full population.
     """
 
-    __slots__ = ("name", "samples")
+    __slots__ = ("name", "samples", "window")
 
-    def __init__(self, name: str):
+    #: default rolling window — generous enough that every bounded
+    #: benchmark/test population fits (identical digests), small enough
+    #: that an open-ended serving run cannot grow without limit
+    DEFAULT_WINDOW = 8192
+
+    def __init__(self, name: str, window: int | None = DEFAULT_WINDOW):
+        if window is not None and window <= 0:
+            raise ValueError(f"histogram window must be positive or None, "
+                             f"got {window}")
         self.name = name
-        self.samples: list[float] = []
+        self.window = window
+        self.samples: deque[float] = deque(maxlen=window)
 
     def observe(self, v: float) -> None:
         self.samples.append(float(v))
@@ -150,8 +176,25 @@ class MetricsRegistry:
     def gauge(self, name: str) -> Gauge:
         return self._get(name, Gauge)
 
-    def histogram(self, name: str) -> Histogram:
-        return self._get(name, Histogram)
+    def histogram(self, name: str, *,
+                  window: int | None = None) -> Histogram:
+        """Get-or-create a histogram.  ``window`` applies at creation
+        (``None`` = the class default); asking for an existing histogram
+        with a *different* explicit window is an error — the window is
+        part of the metric's meaning, two layers must not silently
+        disagree on it."""
+        m = self._metrics.get(name)
+        if m is None:
+            m = Histogram(name) if window is None \
+                else Histogram(name, window=window)
+            self._metrics[name] = m
+        elif type(m) is not Histogram:
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{type(m).__name__}, not Histogram")
+        elif window is not None and m.window != window:
+            raise ValueError(f"histogram {name!r} already registered with "
+                             f"window={m.window}, not {window}")
+        return m
 
     def names(self) -> list[str]:
         return sorted(self._metrics)
@@ -169,6 +212,34 @@ class MetricsRegistry:
             else:
                 out[name] = m.summary()  # type: ignore[union-attr]
         return out
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (version 0.0.4) of every metric.
+
+        Counters and gauges expose their value; histograms expose the
+        summary type (quantiles over the current window plus ``_sum`` /
+        ``_count``).  Dots in metric names become underscores — the only
+        transform needed to satisfy the exposition grammar, and it is
+        reversible for every name the repo registers (none contain
+        underscore/dot collisions)."""
+        lines: list[str] = []
+        for name in self.names():
+            m = self._metrics[name]
+            pname = name.replace(".", "_")
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {_prom_num(m.value)}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {_prom_num(m.value)}")
+            else:
+                lines.append(f"# TYPE {pname} summary")
+                for q in (0.5, 0.95, 0.99):
+                    lines.append(f'{pname}{{quantile="{q}"}} '
+                                 f"{_prom_num(m.percentile(q * 100.0))}")
+                lines.append(f"{pname}_sum {_prom_num(sum(m.samples))}")
+                lines.append(f"{pname}_count {m.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
 
     def __contains__(self, name: str) -> bool:
         return name in self._metrics

@@ -66,7 +66,12 @@ class Tracer:
     Scheduler and call :meth:`to_chrome` / :meth:`save` at the end."""
 
     def __init__(self, defer: bool = True):
-        # (src, dst, level, t0, t1, nbytes, kind, first, label)
+        # (src, dst, level, t0, t1, nbytes, kind, first, label,
+        #  flow_end, gid) — t1 is the delivery time (latency tail included
+        # for `first` sends); flow_end is when the payload stopped flowing
+        # on the link (t1 minus the latency tail); gid names the simulator
+        # invocation the interval shared bandwidth within, so contention
+        # analysis never couples transfers that were priced independently
         self.links: list[tuple] = []
         # (pid, key, name, t0, t1, args_or_None)
         self.spans: list[tuple] = []
@@ -82,6 +87,7 @@ class Tracer:
         # use, and what the overhead benchmark compares against).
         self.defer = defer
         self._pending: list = []
+        self._group = 0
         self._wall0 = time.perf_counter()
 
     # -------------------------------------------------------------- #
@@ -89,10 +95,25 @@ class Tracer:
     # -------------------------------------------------------------- #
 
     def link(self, src: int, dst: int, level: int, t0: float, t1: float,
-             nbytes: float, kind: str, first: bool, label=None) -> None:
-        """One busy interval on the directed edge src->dst (virtual time)."""
+             nbytes: float, kind: str, first: bool, label=None,
+             flow_end: float | None = None, gid: int | None = None) -> None:
+        """One busy interval on the directed edge src->dst (virtual time).
+
+        ``flow_end`` is when the payload stopped occupying the link
+        (default: ``t1``, i.e. no latency tail); ``gid`` is the sharing
+        group (default: a fresh group, i.e. the interval contended with
+        nothing — the simulators pass :meth:`group` so every transfer of
+        one invocation lands in the same group)."""
         self.links.append((src, dst, level, t0, t1, nbytes, kind, first,
-                           label))
+                           label, t1 if flow_end is None else flow_end,
+                           self.group() if gid is None else gid))
+
+    def group(self) -> int:
+        """A fresh bandwidth-sharing group id.  Each simulator invocation
+        grabs one and stamps it on every link interval it records; only
+        intervals in the same group ever shared a link's bandwidth."""
+        self._group += 1
+        return self._group
 
     def span(self, pid: int, key, name: str, t0: float, t1: float,
              args=None) -> None:
@@ -170,7 +191,8 @@ class Tracer:
                                    key=lambda r: (r[0], str(r[1]))):
             tid_of(pid, str(key))
 
-        for (src, dst, level, t0, t1, nbytes, kind, first, label) in self.links:
+        for (src, dst, level, t0, t1, nbytes, kind, first, label,
+             _fe, _gid) in self.links:
             args = {"bytes": nbytes, "level": level, "kind": kind,
                     "first": bool(first)}
             if label is not None:
@@ -227,11 +249,20 @@ class Tracer:
     def link_samples(self) -> list[tuple]:
         """(src, dst, level, duration_s, nbytes, first) per interval — the
         raw material ``obs.feedback`` turns into per-link-class
-        residuals."""
+        residuals.  Durations are as traced: stretched by contention when
+        the run was concurrent (``obs.contention.deconvolve`` undoes
+        that)."""
         self._materialize()
         return [(src, dst, level, t1 - t0, nbytes, first)
-                for (src, dst, level, t0, t1, nbytes, _k, first, _lb)
+                for (src, dst, level, t0, t1, nbytes, _k, first, _lb,
+                     _fe, _gid)
                 in self.links]
+
+    def link_records(self) -> list[tuple]:
+        """The raw link tuples (see ``__init__`` for the layout), with any
+        deferred replays materialized — what ``obs.contention`` consumes."""
+        self._materialize()
+        return self.links
 
     def busy_by_level(self) -> dict[int, float]:
         """Total busy seconds per link class — the quick 'which stratum was

@@ -242,8 +242,10 @@ class Scheduler:
     """See module docstring.  One instance runs one trace via :meth:`run`.
 
     ``engine``/``replicas``/``weight_bytes``/``gather_bytes`` wire the
-    network plane: each step issues one small allgather per running request
-    (on its tensor-parallel replica group, priority 1.0) and, every
+    network plane: each step issues one small per-request collective
+    (``gather_op``: "allgather" models column-parallel activation
+    gathering, "allreduce" row-parallel output reduction) on the request's
+    tensor-parallel replica group at priority 1.0 and, every
     ``bcast_every`` steps, the fat weight broadcast over all ranks (default
     priority ``-nbytes`` — it only wins a link when nothing small wants it,
     aged so it cannot starve).  Without an engine the step cost is pure
@@ -255,13 +257,16 @@ class Scheduler:
                  compute_model=None, engine=None,
                  replicas: Sequence[tuple[int, ...]] | None = None,
                  weight_bytes: float = 0.0, gather_bytes: float = 1.0,
-                 bcast_every: int = 0,
-                 tracer=None, metrics: MetricsRegistry | None = None):
+                 gather_op: str = "allgather", bcast_every: int = 0,
+                 tracer=None, metrics: MetricsRegistry | None = None,
+                 monitor=None):
         if policy not in SchedPolicy:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {SchedPolicy}")
         if mode not in ("paged", "dense"):
             raise ValueError(f"unknown mode {mode!r}")
+        if gather_op not in ("allgather", "allreduce"):
+            raise ValueError(f"unknown gather_op {gather_op!r}")
         if s_max % block_size:
             raise ValueError("s_max must be a multiple of block_size")
         self.ex = executor
@@ -278,10 +283,15 @@ class Scheduler:
         self.replicas = list(replicas or [])
         self.weight_bytes = float(weight_bytes)
         self.gather_bytes = float(gather_bytes)
+        self.gather_op = gather_op
         self.bcast_every = bcast_every
         # a traced engine traces its scheduler too (one trace per serve run)
         self.tracer = tracer if tracer is not None \
             else getattr(engine, "tracer", None)
+        # a monitored engine monitors its scheduler too (request outcomes
+        # and the per-step health check ride the same object)
+        self.monitor = monitor if monitor is not None \
+            else getattr(engine, "monitor", None)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._m_done = self.metrics.counter("serve.done")
         self._m_shed = self.metrics.counter("serve.shed")
@@ -319,6 +329,8 @@ class Scheduler:
                 r.state = ReqState.SHED
                 r.finish_s = now
                 self._m_shed.inc()
+                if self.monitor is not None:
+                    self.monitor.observe_request(r)
                 if self.tracer is not None:
                     self.tracer.instant(PID_REQUESTS, f"req{r.rid}", "shed",
                                         now, {"reason": "ttft deadline past",
@@ -361,7 +373,7 @@ class Scheduler:
             members = (self.replicas[r.slot % len(self.replicas)]
                        if self.replicas else None)
             handles.append(self.engine.issue(
-                "allgather", self.gather_bytes, members=members,
+                self.gather_op, self.gather_bytes, members=members,
                 at=now, priority=1.0))
         if (self.bcast_every and self.weight_bytes
                 and step % self.bcast_every == 0):
@@ -433,6 +445,8 @@ class Scheduler:
                 victim.state = ReqState.SHED
                 victim.finish_s = now
                 self._m_shed.inc()
+                if self.monitor is not None:
+                    self.monitor.observe_request(victim, evicted=True)
                 if tr is not None:
                     tr.instant(PID_REQUESTS, f"req{victim.rid}", "evicted",
                                now, {"reason": "OOM deadlock, youngest "
@@ -477,6 +491,8 @@ class Scheduler:
                         self._m_ttft.observe(r.ttft)
                     if r.tpot is not None:
                         self._m_tpot.observe(r.tpot)
+                    if self.monitor is not None:
+                        self.monitor.observe_request(r)
                     if tr is not None:
                         tr.span(PID_REQUESTS, f"req{r.rid}", "decode",
                                 r.first_token_s, now,
@@ -488,5 +504,7 @@ class Scheduler:
                     r.slot = -1
                     running.remove(r)
             step += 1
+            if self.monitor is not None:
+                self.monitor.on_step(now, step)
 
         return ServeReport(requests, step, now, max_conc, stalls)

@@ -421,3 +421,63 @@ def test_sim_policy_started_reflects_executed_schedule(fig8):
     for h in hs:  # started is always consistent with the handle's own times
         assert h.started <= h.finished
         assert h.started >= 0.0
+
+
+# ------------------------------------------------------------------ #
+# Span accounting: the monitor's raw material must be complete.
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("policy", ["fifo", "priority", "sim"])
+def test_spans_carry_predicted_and_measured(fig8, policy):
+    """Every handle's trace span reports predicted_s (isolated plan cost)
+    and measured_s (executed span) under every scheduling policy — the
+    health monitor's straggler scoring and the feedback loop both read
+    these, so a policy that dropped them would silently blind both."""
+    from repro.obs import PID_PROGRAMS, Tracer
+    tr = Tracer()
+    comm = Communicator(fig8, policy="paper", backend="sim", tracer=tr)
+    eng = Engine(comm, policy=policy, tracer=tr)
+    hs = [eng.issue("allreduce", 1e6),
+          eng.issue("bcast", 2e6, root=0, priority=1.0),
+          eng.issue("allgather", 5e5, members=tuple(range(16)))]
+    eng.wait_all()
+    tr.link_records()  # materialize deferred spans
+    op_spans = [s for s in tr.spans
+                if s[0] == PID_PROGRAMS and "predicted_s" in s[5]]
+    assert len(op_spans) == len(hs)
+    by_op = {s[5]["op"]: s for s in op_spans}
+    for h in hs:
+        pid, key, name, t0, t1, args = by_op[h.op]
+        assert name == h.op
+        assert (t0, t1) == (h.started, h.finished)
+        assert args["predicted_s"] > 0.0
+        assert args["measured_s"] == pytest.approx(t1 - t0)
+        assert args["measured_s"] >= 0.0
+        assert args["members"] == len(h.members)
+
+
+def test_span_timestamps_monotone_across_repair(fig8):
+    """Per-track span timestamps stay monotone through Engine.repair:
+    post-repair batches are stamped on the same advancing clock, so the
+    exported trace (and anything windowing over it) never sees time run
+    backwards within a track."""
+    from repro.obs import Tracer
+    tr = Tracer()
+    comm = Communicator(fig8, policy="paper", backend="sim", tracer=tr)
+    eng = Engine(comm, tracer=tr)
+    eng.issue("allreduce", 1e6)
+    eng.issue("bcast", 1e6, root=16)
+    eng.wait_all()
+    eng.repair(failed=range(16, 24))
+    eng.issue("allreduce", 1e6)
+    eng.issue("reduce", 2e6, root=0)
+    eng.wait_all()
+    tr.link_records()
+    tracks: dict = {}
+    for pid, key, name, t0, t1, args in tr.spans:
+        assert t1 >= t0
+        tracks.setdefault((pid, key), []).append((t0, t1))
+    assert tracks
+    for spans in tracks.values():
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a0  # insertion order never rewinds the track
